@@ -1,0 +1,47 @@
+"""§3.5 ablations: (i) growth factor b "is not crucial" (2 vs 1.5 vs 3);
+(ii) initial window n0 "does not affect performance significantly"
+(tested over a 16x range, the paper's 100..2000 span)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BETSchedule, SimulatedClock, run_bet_fixed
+
+from . import common
+from .common import emit, fmt
+
+TOL = 0.02
+
+
+def main() -> None:
+    ds, obj, w0, f_star = common.setup("w8a_like", scale=1.0)
+    opt = common.default_newton(ds)
+
+    times_b = {}
+    for b in (1.5, 2.0, 3.0):
+        tr = run_bet_fixed(ds, opt, obj,
+                           schedule=BETSchedule(n0=256, growth=b),
+                           inner_steps=5, final_steps=25,
+                           clock=common.clock(), w0=w0)
+        times_b[b] = common.time_to_rfvd(tr, f_star, TOL)
+        emit(f"ablation/growth{b:g}", 0.0, f"sim_time={fmt(times_b[b])}")
+    finite = [t for t in times_b.values() if np.isfinite(t)]
+    spread_b = max(finite) / min(finite) if len(finite) > 1 else float("inf")
+    emit("ablation/growth_claim", 0.0,
+         f"spread={spread_b:.2f}x;not_crucial={spread_b < 1.6}")
+
+    times_n = {}
+    for n0 in (128, 512, 2048):
+        tr = run_bet_fixed(ds, opt, obj, schedule=BETSchedule(n0=n0),
+                           inner_steps=5, final_steps=25,
+                           clock=common.clock(), w0=w0)
+        times_n[n0] = common.time_to_rfvd(tr, f_star, TOL)
+        emit(f"ablation/n0_{n0}", 0.0, f"sim_time={fmt(times_n[n0])}")
+    finite = [t for t in times_n.values() if np.isfinite(t)]
+    spread_n = max(finite) / min(finite) if len(finite) > 1 else float("inf")
+    emit("ablation/n0_claim", 0.0,
+         f"spread={spread_n:.2f}x;insensitive={spread_n < 1.6}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 3: time until reaching accuracy within 1% / 0.05% of the optimum
+(webspam-scale problem).  Paper claim: Batch is poorly suited for early
+stopping (large fixed entry cost); BET best at every tolerance.  We report
+the simulated §4.2 time to the RFVD levels the two accuracy bands
+correspond to, plus real wallclock of each driver run."""
+from __future__ import annotations
+
+import time
+
+from repro.models.linear import accuracy, solve_reference
+
+from . import common
+from .common import emit, fmt
+
+
+def main() -> None:
+    ds, obj, w0, f_star = common.setup("webspam_like", scale=0.5)
+    w_star, _ = solve_reference(obj, w0, (ds.X, ds.y), steps=40)
+    acc_star = float(accuracy(w_star, ds.X_test, ds.y_test))
+    t_loose, t_tight = {}, {}
+    for m in ("bet_fixed", "bet", "dsm", "batch"):
+        t0 = time.time()
+        tr = common.run_method(m, ds, obj, w0)
+        wall = time.time() - t0
+        t_loose[m] = common.time_to_rfvd(tr, f_star, 0.05)   # ~ within 1%
+        t_tight[m] = common.time_to_rfvd(tr, f_star, 0.005)  # ~ within .05%
+        final_acc = float(accuracy(tr.params, ds.X_test, ds.y_test))
+        emit(f"fig3/webspam_like/{m}", wall * 1e6,
+             f"t_loose={fmt(t_loose[m])};t_tight={fmt(t_tight[m])};"
+             f"final_acc={final_acc:.4f};opt_acc={acc_star:.4f}")
+    emit("fig3/claim", 0.0,
+         f"bet_best_loose={t_loose['bet_fixed'] <= min(t_loose.values())};"
+         f"bet_best_tight={t_tight['bet_fixed'] <= min(t_tight.values())};"
+         f"batch_slower_than_bet_loose={t_loose['batch'] > t_loose['bet_fixed']}")
+
+
+if __name__ == "__main__":
+    main()

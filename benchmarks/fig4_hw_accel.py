@@ -1,0 +1,32 @@
+"""Fig. 4: effect of hardware acceleration p (with a=1, s=5 fixed).
+Paper claim: increasing p benefits BET more than DSM (BET reuses resident
+data; DSM's resampling keeps paying the load rate), and both plateau once
+data-availability dominates."""
+from __future__ import annotations
+
+from . import common
+from .common import emit, fmt
+
+TOL = 0.01
+
+
+def main() -> None:
+    ds, obj, w0, f_star = common.setup("w8a_like")
+    plateau = {}
+    for m in ("bet", "dsm"):
+        ts = []
+        for p in (1.0, 3.0, 10.0, 30.0, 100.0):
+            tr = common.run_method(m, ds, obj, w0, clk=common.clock(p=p))
+            t = common.time_to_rfvd(tr, f_star, TOL)
+            ts.append(t)
+            emit(f"fig4/p{p:g}/{m}", 0.0, f"sim_time={fmt(t)}")
+        plateau[m] = ts
+    # claim: BET's relative gain from p=1 -> p=100 exceeds DSM's
+    gain = lambda ts: ts[0] / max(ts[-1], 1e-9)
+    emit("fig4/claim", 0.0,
+         f"bet_gain={gain(plateau['bet']):.2f};dsm_gain={gain(plateau['dsm']):.2f};"
+         f"bet_better={gain(plateau['bet']) > gain(plateau['dsm'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Roofline aggregation: reads launch/dryrun.py artifacts and emits the
+per-(arch × shape × mesh) three-term table (EXPERIMENTS.md §Roofline).
+
+    compute_s    = executed dot FLOPs / 197 TFLOP/s        (per chip)
+    memory_s     = fusion-optimistic HBM traffic / 819 GB/s (per chip)
+    collective_s = ring-model wire bytes / 50 GB/s          (per chip)
+
+All three come from the loop-aware HLO accounting (launch/hlo.py) of the
+compiled 512-device SPMD module — see DESIGN.md §7 for methodology and its
+deviations from raw ``cost_analysis()`` (which counts scan bodies once).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+ARTIFACTS = pathlib.Path(__file__).parent / "artifacts"
+
+
+def load_all() -> list[dict]:
+    out = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        try:
+            out.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | policy | compute_s | memory_s | "
+           "collective_s | bottleneck | useful_flops | temp_GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} | "
+            f"{t['compute_s']*1e3:.2f}ms | {t['memory_s']*1e3:.2f}ms | "
+            f"{t['collective_s']*1e3:.2f}ms | {r['bottleneck'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['memory'].get('temp_size_in_bytes', 0)/1e9:.2f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    rows = load_all()
+    if not rows:
+        emit("roofline/none", 0.0, "no artifacts; run repro.launch.dryrun")
+        return
+    md = table(rows)
+    (ARTIFACTS / "roofline_table.md").write_text(md)
+    by_bottleneck: dict = {}
+    for r in rows:
+        by_bottleneck.setdefault(r["bottleneck"], []).append(r)
+        t = r["roofline"]
+        dom = max(t.values())
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['policy']}",
+             dom * 1e6,
+             f"bottleneck={r['bottleneck']};compute_ms={t['compute_s']*1e3:.2f};"
+             f"memory_ms={t['memory_s']*1e3:.2f};"
+             f"collective_ms={t['collective_s']*1e3:.2f};"
+             f"useful={r['useful_flops_ratio']:.2f}")
+    emit("roofline/summary", 0.0,
+         ";".join(f"{k}={len(v)}" for k, v in sorted(by_bottleneck.items()))
+         + f";total={len(rows)};table=benchmarks/artifacts/roofline_table.md")
+
+
+if __name__ == "__main__":
+    main()

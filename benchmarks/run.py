@@ -1,0 +1,45 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig2 fig7  # subset
+
+Each module reproduces one paper artifact (see DESIGN.md §8) on synthetic
+scale-matched datasets and emits machine-checkable claim lines.  The
+roofline module aggregates the dry-run artifacts (deliverable g)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = ["fig2_simulated_runtime", "fig3_wallclock", "fig4_hw_accel",
+           "fig5_parallel", "fig6_test_acc", "fig7_inner_opt",
+           "fig8_dsm_theta", "table1_time_model", "thm41_data_access",
+           "ablation_schedule", "roofline"]
+
+
+def main() -> None:
+    which = sys.argv[1:] or None
+    print("name,us_per_call,derived", flush=True)
+    failures = 0
+    for name in MODULES:
+        if which and not any(name.startswith(w) for w in which):
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"{name}/__wall__,{(time.time()-t0)*1e6:.0f},ok",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/__wall__,{(time.time()-t0)*1e6:.0f},FAILED",
+                  flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

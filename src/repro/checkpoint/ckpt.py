@@ -1,0 +1,107 @@
+"""Checkpointing: flat-key .npz pytree save/restore plus BET schedule state.
+
+A BET checkpoint must capture more than (params, opt_state): resuming
+mid-schedule needs the *window cursor* (stage t, n_t, step) and the clock
+accounting so the data-access guarantees of Thm 4.1 keep holding across
+restarts (the window is a prefix of a fixed permutation, so `n_t` fully
+determines what data the resumed run may touch).
+
+Format: numpy ``.npz`` with '/'-joined pytree key paths + a JSON sidecar
+for structure and scalar metadata — dependency-free and host-shardable
+(each data-parallel host saves its own shard of the window cursor; params
+are saved from host 0 after a gather in the real deployment, whole arrays
+here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path, params, opt_state=None, *, meta: dict | None = None):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    # dtype survival: bfloat16 has no native npz dtype -> save raw + tag
+    dtypes = {}
+    packed = {}
+    for k, v in arrays.items():
+        if v.dtype == jnp.bfloat16:
+            packed[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            packed[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(path.with_suffix(".npz"), **packed)
+    sidecar = {"dtypes": dtypes, "meta": meta or {}}
+    path.with_suffix(".json").write_text(json.dumps(sidecar, indent=2))
+
+
+def load_checkpoint(path, params_like, opt_like=None):
+    """Restores into the structure of ``params_like`` (shapes must match)."""
+    path = pathlib.Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    sidecar = json.loads(path.with_suffix(".json").read_text())
+    dtypes = sidecar["dtypes"]
+
+    def restore(prefix, like):
+        flat_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+        leaves = []
+        for p, leaf in flat_paths:
+            key = prefix + "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+            arr = data[key]
+            if dtypes[key] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            leaves.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+
+    params = restore("params/", params_like)
+    opt = restore("opt/", opt_like) if opt_like is not None else None
+    return params, opt, sidecar["meta"]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Rolling checkpoints with BET schedule state."""
+    directory: str
+    keep: int = 3
+
+    def save(self, step: int, params, opt_state=None, *, stage: int = 0,
+             window: int = 0, sim_time: float = 0.0, accesses: int = 0):
+        d = pathlib.Path(self.directory)
+        save_checkpoint(d / f"ckpt_{step:08d}", params, opt_state,
+                        meta={"step": step, "stage": stage, "window": window,
+                              "sim_time": sim_time, "accesses": accesses})
+        ckpts = sorted(d.glob("ckpt_*.npz"))
+        for old in ckpts[: -self.keep]:
+            old.unlink(missing_ok=True)
+            old.with_suffix(".json").unlink(missing_ok=True)
+
+    def latest(self):
+        ckpts = sorted(pathlib.Path(self.directory).glob("ckpt_*.npz"))
+        return ckpts[-1].with_suffix("") if ckpts else None
+
+    def restore(self, params_like, opt_like=None):
+        latest = self.latest()
+        if latest is None:
+            return None
+        return load_checkpoint(latest, params_like, opt_like)

@@ -1,0 +1,104 @@
+"""Dynamic Sample-size Method (Byrd, Chin, Nocedal, Wu; Math. Prog. 2012) —
+the paper's closest competitor (§2, §5, App. A.2).
+
+Each iteration draws a *fresh i.i.d. sample* S of size n (resampling — the
+resource cost BET avoids), performs one inner-optimizer update on it, and
+tests the gradient-variance condition
+
+    ‖Var_{i∈S}[∇ℓ_i(w)]‖₁ / |S| ≤ θ² ‖∇f_S(w)‖²  .
+
+If the test fails the sample size is increased geometrically.  θ is the
+sensitivity parameter the paper's App. A.2 sweeps (Fig. 8); unlike BET, DSM's
+behaviour (and even convergence) depends on tuning it.  Because samples are
+resampled, cross-update optimizer memory is invalid: we reset it every step
+(the paper makes the same observation for CG under DSM).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim.api import BatchOptimizer, Objective
+from .timemodel import SimulatedClock
+from .trace import Trace
+
+
+def _variance_ratio(objective: Objective, w, sample) -> float:
+    """‖Var_i ∇ℓ_i‖₁/|S|  vs  ‖ḡ‖² — computed via per-example gradients."""
+    X, y = sample
+
+    def per_example(xi, yi):
+        g = jax.grad(lambda p: objective(p, (xi[None, :], yi[None])))(w)
+        return g
+
+    gs = jax.vmap(per_example)(X, y)                 # (n, d)
+    gbar = jnp.mean(gs, axis=0)
+    var = jnp.mean((gs - gbar) ** 2, axis=0)         # diagonal variance
+    return float(jnp.sum(var) / X.shape[0]), float(jnp.sum(gbar ** 2))
+
+
+def run_dsm(dataset, optimizer: BatchOptimizer, objective: Objective, *,
+            theta: float = 0.5, n0: int = 200, growth: float = 2.0,
+            steps: int = 200, clock: SimulatedClock | None = None,
+            w0=None, seed: int = 0) -> Trace:
+    clock = clock or SimulatedClock()
+    full_data = (dataset.X, dataset.y)
+    N = dataset.n
+    rng = np.random.default_rng(seed)
+    w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
+    n = n0
+    trace = Trace("dsm", meta={"optimizer": optimizer.name, "theta": theta})
+    Xn, yn = np.asarray(dataset.X), np.asarray(dataset.y)
+
+    for k in range(steps):
+        idx = rng.choice(N, size=min(n, N), replace=False)
+        sample = (jnp.asarray(Xn[idx]), jnp.asarray(yn[idx]))
+        state = optimizer.reset_memory(optimizer.init(w))  # no cross-sample memory
+        w, state, aux = optimizer.step(w, state, objective, sample)
+        clock.stochastic_update(len(idx))                  # resampled accesses
+        # variance test on a bounded probe (cost charged as compute)
+        probe = min(len(idx), 512)
+        v, g2 = _variance_ratio(objective, w, (sample[0][:probe], sample[1][:probe]))
+        clock.eval_pass(probe)
+        if v > (theta ** 2) * max(g2, 1e-30) and n < N:
+            n = min(N, int(np.ceil(n * growth)))
+        f_full = float(objective(w, full_data))
+        trace.add(step=k, stage=0, window=n, time=clock.time,
+                  accesses=clock.data_accesses, f_window=float(aux["f"]),
+                  f_full=f_full, extra={"var": v, "g2": g2})
+        if n >= N and v <= (theta ** 2) * max(g2, 1e-30):
+            pass  # keep iterating on full batches until step budget
+    trace.params = w
+    return trace
+
+
+def run_minibatch(dataset, optimizer: BatchOptimizer, objective: Objective, *,
+                  batch_size: int = 64, steps: int = 2000,
+                  clock: SimulatedClock | None = None, w0=None,
+                  seed: int = 0, record_every: int = 20) -> Trace:
+    """Mini-batch stochastic baseline (Adagrad in the paper's §5)."""
+    clock = clock or SimulatedClock()
+    full_data = (dataset.X, dataset.y)
+    N = dataset.n
+    rng = np.random.default_rng(seed)
+    w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
+    state = optimizer.init(w)
+    Xn, yn = np.asarray(dataset.X), np.asarray(dataset.y)
+    step_fn = jax.jit(lambda p, s, d: optimizer.step(p, s, objective, d))
+    trace = Trace("minibatch", meta={"optimizer": optimizer.name,
+                                     "batch_size": batch_size})
+    for k in range(steps):
+        idx = rng.choice(N, size=batch_size, replace=False)
+        batch = (jnp.asarray(Xn[idx]), jnp.asarray(yn[idx]))
+        w, state, aux = step_fn(w, state, batch)
+        clock.stochastic_update(batch_size)
+        if k % record_every == 0 or k == steps - 1:
+            f_full = float(objective(w, full_data))
+            trace.add(step=k, stage=0, window=batch_size, time=clock.time,
+                      accesses=clock.data_accesses, f_window=float(aux["f"]),
+                      f_full=f_full)
+    trace.params = w
+    return trace

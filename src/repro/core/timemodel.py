@@ -1,0 +1,65 @@
+"""The paper's §4.2 time-complexity model, as an explicit simulated clock.
+
+Architecture parameters:
+  * ``p`` — hardware acceleration: processing one data point takes 1/p units,
+  * ``a`` — sequential data-loading: one *new* point becomes available every
+    ``a`` units (loading runs concurrently with computation),
+  * ``s`` — fixed overhead between two consecutive inner-optimizer calls.
+
+Charging rules (Table 1):
+  * batch-style update on a window of n already-permuted points: the call
+    blocks until n points have been loaded (concurrent loading), then costs
+    ``s + n/p``.  Only *new* points count as data loads.
+  * stochastic (resampled) update on b points: resampling defeats the
+    sequential prefetcher, so every access pays the load rate:
+    ``s + b*(a + 1/p)``.
+  * evaluation passes (e.g. the two-track condition (3)) cost compute only.
+
+On a TPU pod, ``a`` models per-host outfeed/normalization of fresh shards and
+``p`` the pod's aggregate throughput (DESIGN.md §2); the algebra is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SimulatedClock:
+    p: float = 10.0
+    a: float = 1.0
+    s: float = 5.0
+    preloaded: int = 0          # points available at t=0
+
+    time: float = 0.0
+    data_accesses: int = 0      # total points touched by optimizer calls
+    points_loaded: int = 0      # unique points pulled from storage
+
+    def available(self) -> float:
+        """Points loaded by now under concurrent sequential loading."""
+        return self.preloaded + self.time / self.a
+
+    def wait_for(self, n: int) -> None:
+        """Block until n unique points are resident."""
+        if n > self.points_loaded:
+            need_time = (n - self.preloaded) * self.a
+            self.time = max(self.time, need_time)
+            self.points_loaded = max(self.points_loaded, n)
+
+    def batch_update(self, n: int) -> None:
+        self.wait_for(n)
+        self.time += self.s + n / self.p
+        self.data_accesses += n
+
+    def eval_pass(self, n: int) -> None:
+        """Measurement/condition evaluation over resident data."""
+        self.time += n / self.p
+        self.data_accesses += n
+
+    def stochastic_update(self, b: int) -> None:
+        self.time += self.s + b * (self.a + 1.0 / self.p)
+        self.data_accesses += b
+        self.points_loaded += b  # resampled loads (may recount points)
+
+    def snapshot(self) -> dict:
+        return {"time": self.time, "accesses": self.data_accesses,
+                "loaded": self.points_loaded}

@@ -1,0 +1,34 @@
+"""Run traces shared by all training drivers and the benchmark harness."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class Point:
+    step: int
+    stage: int
+    window: int          # n_t
+    time: float          # simulated clock
+    accesses: int
+    f_window: float      # f̂_t(w) on the current window
+    f_full: float        # f̂(w) on the full dataset (measurement only)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Trace:
+    method: str
+    points: list = dataclasses.field(default_factory=list)
+    params: Any = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, **kw):
+        self.points.append(Point(**kw))
+
+    def column(self, name):
+        return [getattr(p, name) for p in self.points]
+
+    def final(self) -> Point:
+        return self.points[-1]

@@ -1,0 +1,2 @@
+from .synthetic import Dataset, load, make_classification, PAPER_LIKE
+from .window import ExpandingWindow, synth_corpus

@@ -1,0 +1,93 @@
+"""ExpandingWindow — BET's data-access primitive for the distributed LM path.
+
+The training corpus is pre-permuted and split into fixed-size *shards*
+(modelling files on NAS / host-local slices of a cloud dataset).  BET's
+contract (§3.3): the optimizer at stage t may touch only the first n_t
+examples of the permutation, every already-loaded shard is reused, and
+loading of the next shards overlaps with computation.
+
+``ExpandingWindow`` tracks which shards are resident per data-parallel host,
+exposes ``grow()`` (double the window = the Alg. 1 expansion), and accounts
+loading cost through the same SimulatedClock as the convex path, so the
+paper's time model applies end-to-end to the LM experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.timemodel import SimulatedClock
+
+
+@dataclasses.dataclass
+class ExpandingWindow:
+    """A windowed view over a pre-permuted token corpus.
+
+    tokens: (N, seq_len) int32 — sequence-packed examples, pre-permuted.
+    """
+    tokens: np.ndarray
+    n0: int
+    growth: float = 2.0
+    clock: SimulatedClock | None = None
+
+    def __post_init__(self):
+        self.n_t = min(self.n0, len(self.tokens))
+        if self.clock is not None:
+            self.clock.wait_for(self.n_t)
+
+    @property
+    def N(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def full(self) -> bool:
+        return self.n_t >= self.N
+
+    def grow(self) -> int:
+        """Expand the window (Alg. 1 line: n_{t+1} <- b * n_t)."""
+        new_n = min(self.N, int(np.ceil(self.n_t * self.growth)))
+        if self.clock is not None and new_n > self.n_t:
+            self.clock.wait_for(new_n)     # loading overlaps; block if behind
+        self.n_t = new_n
+        return self.n_t
+
+    def window(self) -> np.ndarray:
+        return self.tokens[: self.n_t]
+
+    def previous_window(self) -> np.ndarray:
+        """The half-size window used by the two-track secondary."""
+        prev = max(1, int(self.n_t / self.growth))
+        return self.tokens[:prev]
+
+    def sample_batch(self, batch_size: int, step: int) -> np.ndarray:
+        """Deterministic rotation through the resident window (sequential
+        epochs over loaded data — no random disk access, the BET property).
+        Charges the clock for one batch of compute-side access."""
+        n = self.n_t
+        idx = (np.arange(batch_size) + step * batch_size) % n
+        if self.clock is not None:
+            self.clock.eval_pass(batch_size)
+        return self.tokens[idx]
+
+    def host_shard(self, batch: np.ndarray, host: int, num_hosts: int):
+        """Per-host slice of a global batch (data-parallel loading)."""
+        per = len(batch) // num_hosts
+        return batch[host * per: (host + 1) * per]
+
+
+def synth_corpus(n_seqs: int, seq_len: int, vocab: int, *,
+                 seed: int = 0) -> np.ndarray:
+    """Synthetic Zipf-distributed token corpus with local n-gram structure —
+    enough statistical texture for loss curves to be meaningful."""
+    rng = np.random.default_rng(seed)
+    # Zipfian unigrams
+    ranks = np.arange(1, vocab + 1)
+    probs = 1.0 / ranks ** 1.1
+    probs /= probs.sum()
+    base = rng.choice(vocab, size=(n_seqs, seq_len), p=probs)
+    # inject bigram structure: with prob .5, next token = f(prev)
+    shift = (base[:, :-1] * 31 + 7) % vocab
+    mask = rng.random((n_seqs, seq_len - 1)) < 0.5
+    base[:, 1:] = np.where(mask, shift, base[:, 1:])
+    return base.astype(np.int32)

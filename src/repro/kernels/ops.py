@@ -1,0 +1,81 @@
+"""jit'd public wrappers around the Pallas kernels: shape normalization
+(padding to block multiples, GQA head expansion) + dispatch.
+
+``interpret=True`` everywhere in this container (CPU validation); on real
+TPU hardware set ``repro.kernels.ops.INTERPRET = False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import linear_grad as _lg
+from . import rglru_scan as _rg
+from . import ssm_scan as _ss
+
+INTERPRET = True
+
+
+def linear_forward(X, w):
+    # forward margins alone are a plain GEMV; the fused win is in value_grad
+    return X @ w
+
+
+def linear_value_grad(X, y, w, *, loss: str = "squared_hinge",
+                      block_m: int = 128):
+    n, d = X.shape
+    pad = (-n) % block_m
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad), constant_values=1.0)  # margin 1·0 = 0 loss?
+        # padded rows: y=1, Xw=0 -> squared hinge loss 1, grad -2·x = 0 (x=0)
+        # loss contribution of pad rows is constant wrt w but nonzero; fix by
+        # subtracting it below.
+    L, g = _lg.linear_value_grad(X, y, w, loss=loss, block_m=block_m,
+                                 interpret=INTERPRET)
+    if pad:
+        if loss == "squared_hinge":
+            L = L - pad * 1.0          # each zero-row contributes ℓ(0) = 1
+        else:
+            L = L - pad * jnp.log(2.0)  # logistic ℓ(0) = log 2
+    return L, g
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) — model layout (seq-major).
+    Expands GQA KV heads and pads S to block multiples."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # (B, S, H, hd) -> (B, H, S, hd)
+    qT, kT, vT = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    pad = (-S) % max(bq, bk)
+    if pad:
+        qT = jnp.pad(qT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = _fa.flash_attention(qT, kT, vT, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=INTERPRET)
+    if pad:
+        out = out[:, :, :S]
+    return jnp.swapaxes(out, 1, 2)      # back to (B, S, H, hd)
+
+
+def ssm_scan(u, delta, B_ssm, C_ssm, A_log, D, *, block_d: int = 256):
+    di = u.shape[-1]
+    bd = min(block_d, di)
+    while di % bd:
+        bd -= 1
+    return _ss.ssm_scan(u, delta, B_ssm, C_ssm, A_log, D, block_d=bd,
+                        interpret=INTERPRET)
+
+
+def rglru_scan(a, b, *, block_w: int = 256):
+    return _rg.rglru_scan(a, b, block_w=block_w, interpret=INTERPRET)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------- fused linear grad
+def linear_forward(X, w):
+    return X @ w
+
+
+def linear_value_grad(X, y, w, loss: str = "squared_hinge"):
+    """Returns (sum loss_i, grad of sum loss_i wrt w) — the paper's convex
+    hot spot: Xw -> elementwise loss' -> Xᵀr, all in one pass."""
+    m = y * (X @ w)
+    if loss == "squared_hinge":
+        li = jnp.maximum(0.0, 1.0 - m) ** 2
+        dm = -2.0 * jnp.maximum(0.0, 1.0 - m)
+    elif loss == "logistic":
+        li = jax.nn.softplus(-m)
+        dm = -jax.nn.sigmoid(-m)
+    else:
+        raise ValueError(loss)
+    r = dm * y
+    return jnp.sum(li), X.T @ r
+
+
+# -------------------------------------------------------- flash attention
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B, H, S, hd) — plain softmax attention oracle."""
+    B, H, S, hd = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    scores = jnp.where(ok, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+
+
+# --------------------------------------------------------------- ssm scan
+def ssm_scan(u, delta, B_ssm, C_ssm, A_log, D):
+    """Mamba selective scan oracle.
+    u, delta: (B, S, di); B_ssm, C_ssm: (B, S, N); A_log: (di, N); D: (di,).
+    Returns y: (B, S, di)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    Bsz, S, di = u.shape
+
+    def body(h, xs):
+        u_t, d_t, b_t, c_t = xs
+        dA = jnp.exp(d_t[..., None].astype(jnp.float32) * A)
+        dBu = (d_t * u_t)[..., None].astype(jnp.float32) \
+            * b_t[:, None, :].astype(jnp.float32)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((Bsz, di, A.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (jnp.moveaxis(u, 1, 0),
+                                    jnp.moveaxis(delta, 1, 0),
+                                    jnp.moveaxis(B_ssm, 1, 0),
+                                    jnp.moveaxis(C_ssm, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)
+    return (y + u.astype(jnp.float32) * D).astype(u.dtype)
+
+
+# -------------------------------------------------------------- rg-lru scan
+def rglru_scan(a, b):
+    """h_t = a_t * h_{t-1} + b_t oracle.  a, b: (B, S, W) -> (B, S, W)."""
+    def body(h, xs):
+        a_t, b_t = xs
+        h = a_t.astype(jnp.float32) * h + b_t.astype(jnp.float32)
+        return h, h.astype(a.dtype)
+
+    h0 = jnp.zeros(a.shape[::2], jnp.float32)  # (B, W)
+    _, ys = jax.lax.scan(body, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,55 @@
+"""RG-LRU gated diagonal recurrence Pallas kernel (recurrentgemma hot spot).
+
+    h_t = a_t ⊙ h_{t-1} + b_t        (a_t, b_t precomputed per §rglru.py)
+
+TPU adaptation: the CUDA version maps channels to threads with a
+warp-parallel time loop; here the grid is (B, width/bw) with the time
+recurrence as an in-kernel fori_loop and the (bw,) state in VMEM scratch.
+All S×bw inputs live in VMEM tiles (one HBM read per tensor); the XLA scan
+path re-reads its carry buffers every step.
+
+VMEM per program: 3 tiles × S×bw×4 B ≈ 3 MB at S=4096, bw=256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, y_ref, h_scr, *, S: int):
+    h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, _):
+        a_t = a_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)
+        h = a_t * h_scr[...] + b_t
+        h_scr[...] = h
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, S, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan(a, b, *, block_w: int = 256, interpret: bool = True):
+    """a, b: (B, S, W) -> h-trajectory y: (B, S, W) with h_0 = 0."""
+    B, S, W = a.shape
+    bw = min(block_w, W)
+    while W % bw:
+        bw -= 1
+    return pl.pallas_call(
+        functools.partial(_kernel, S=S),
+        grid=(B, W // bw),
+        in_specs=[
+            pl.BlockSpec((1, S, bw), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, S, bw), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, S, bw), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

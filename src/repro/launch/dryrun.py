@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without real
+hardware.
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the appropriate step (train_step for train_4k, prefill_step for
+prefill_32k, serve_step for the decode shapes) against ShapeDtypeStruct
+inputs, prints memory/cost analysis, extracts collective traffic from the
+SPMD HLO, and derives the three roofline terms (TPU v5e constants).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--policy fsdp_tp] \
+        [--out benchmarks/artifacts]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full 10×4×2 sweep
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..models import transformer as T
+from . import hlo, specs, steps
+from .mesh import make_production_mesh
+from .shardings import (batch_partition, cache_partition, param_specs_tree,
+                        to_named)
+
+# --- TPU v5e roofline constants (per chip) ---
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (aggregate per-chip approx)
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference."""
+    S, B, kind = specs.INPUT_SHAPES[shape_name]
+    n_active = cfg.active_params()
+    if kind == "train":
+        return 6.0 * n_active * B * S
+    if kind == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B  # decode: one token per sequence
+
+
+def build_step(cfg, shape_name: str, mesh, policy: str):
+    """Returns (jitted_fn, example_args (abstract)).
+
+    Policy grammar: base ("fsdp_tp" | "tp") + optional variants:
+      +act  — activation-sharding constraints (§Perf iteration 1)
+      +kv   — expand GQA KV heads to H for clean TP (§Perf iteration 2)
+    e.g. ``fsdp_tp+act+kv``.
+    """
+    from ..models import shard_ctx
+    from .shardings import make_activation_sharder
+    parts = policy.split("+")
+    policy, variants = parts[0], set(parts[1:])
+    dp = tuple(mesh.axis_names) if policy == "fsdp" else None
+    shard_ctx.set_sharder(
+        make_activation_sharder(mesh, variants, dp=dp)
+        if variants & {"act", "attnb", "seq"} else None)
+    if "kv" in variants:
+        cfg = cfg.with_(expand_kv=True)
+    S, B, kind = specs.INPUT_SHAPES[shape_name]
+    pshape = T.param_specs(cfg)
+    batch = specs.batch_specs(cfg, shape_name)
+    batch_sh = to_named(batch_partition(cfg, batch, mesh, dp=dp), mesh)
+
+    if kind == "train":
+        param_sh = to_named(param_specs_tree(cfg, pshape, mesh, policy), mesh)
+        opt_shape = steps.opt_state_specs(pshape)
+        opt_sh = {"m": param_sh, "v": param_sh,
+                  "t": NamedSharding(mesh, P())}
+        fn = steps.make_train_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        return jitted, (pshape, opt_shape, batch)
+
+    # inference shapes use the tensor-parallel serving layout
+    serve_policy = "tp" if policy == "fsdp_tp" else policy
+    param_sh = to_named(param_specs_tree(cfg, pshape, mesh, serve_policy), mesh)
+    if kind == "prefill":
+        fn = steps.make_prefill_step(cfg, cache_len=S)
+        cache_shape = jax.eval_shape(fn, pshape, batch)[1]
+        cache_sh = to_named(cache_partition(cfg, cache_shape, mesh), mesh)
+        logits_sh = None
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(logits_sh, cache_sh))
+        return jitted, (pshape, batch)
+
+    cache_shape = specs.cache_specs(cfg, shape_name)
+    cache_sh = to_named(cache_partition(cfg, cache_shape, mesh), mesh)
+    fn = steps.make_serve_step(cfg)
+    jitted = jax.jit(fn, in_shardings=(param_sh, cache_sh, batch_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=(1,))
+    return jitted, (pshape, cache_shape, batch)
+
+
+def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
+            policy: str = "fsdp_tp", save_hlo: str | None = None) -> dict:
+    cfg = configs.get(arch)
+    S, B, kind = specs.INPUT_SHAPES[shape_name]
+    if kind == "decode":
+        cfg = specs.serve_config(cfg, shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    with mesh:
+        jitted, args = build_step(cfg, shape_name, mesh, policy)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+
+    acc = hlo.analyze(text)          # loop-aware: dots, collectives, traffic
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(text)
+
+    flops_dev = acc["flops"]
+    bytes_dev = acc["traffic_bytes"]
+    wire_dev = acc["wire_bytes"]
+    mf = model_flops(cfg, shape_name)
+
+    result = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": policy, "chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_wire_bytes_per_device": wire_dev,
+        "collectives": acc["collectives"],
+        "loops": acc["loops"],
+        "cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; see loop-aware fields",
+        },
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "roofline": {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": wire_dev / ICI_BW,
+        },
+        "collective_s_tpu_corrected":
+            acc.get("wire_bytes_tpu", wire_dev) / ICI_BW,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / flops_dev if flops_dev else 0.0,
+    }
+    terms = result["roofline"]
+    result["bottleneck"] = max(terms, key=terms.get)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(specs.INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", type=str, default="fsdp_tp",
+                    help="fsdp_tp | tp, with optional +act / +kv variants")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full arch x shape sweep on this mesh")
+    ap.add_argument("--out", type=str, default="benchmarks/artifacts")
+    ap.add_argument("--save-hlo", type=str, default=None)
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    combos = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in specs.INPUT_SHAPES:
+                combos.append((arch, shape))
+    else:
+        combos.append((args.arch, args.shape))
+
+    for arch, shape in combos:
+        tag = f"{configs.ALIASES.get(arch, arch)}__{shape}__" \
+              f"{'2x16x16' if args.multi_pod else '16x16'}__{args.policy}"
+        try:
+            res = dry_run(arch, shape, multi_pod=args.multi_pod,
+                          policy=args.policy, save_hlo=args.save_hlo)
+            (outdir / f"{tag}.json").write_text(json.dumps(res, indent=2))
+            r = res["roofline"]
+            print(f"OK   {tag}: compute={r['compute_s']*1e3:.2f}ms "
+                  f"memory={r['memory_s']*1e3:.2f}ms "
+                  f"collective={r['collective_s']*1e3:.2f}ms "
+                  f"bottleneck={res['bottleneck']} "
+                  f"(lower {res['lower_s']}s compile {res['compile_s']}s)",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — sweep must report, not die
+            (outdir / f"{tag}.FAILED.txt").write_text(traceback.format_exc())
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Collective forensics for the §Perf loop: compile one combo and print the
+top collective sites (wire bytes × loop multiplicity, with op provenance).
+
+    PYTHONPATH=src python -m repro.launch.forensics --arch falcon-mamba-7b \
+        --shape train_4k --policy fsdp_tp+act [--top 15]
+"""
+import argparse
+
+from . import hlo as H
+
+
+def collective_sites(text: str) -> list:
+    mod = H.Module(text)
+    sites = []
+
+    def visit(comp_name, mult, depth):
+        comp = mod.comps.get(comp_name)
+        if comp is None or depth > 32:
+            return
+        for line in comp.lines:
+            coll = next((c for c in H._COLLECTIVES
+                         if f" {c}(" in line or f" {c}-start(" in line), None)
+            if coll:
+                result = line.split("=", 1)[1].split(f" {coll}")[0]
+                ob = H._bytes(result)
+                n = H._group_size(line, 2)
+                wb = mult * H._wire_bytes(coll, ob, n)
+                meta = (line.split('op_name="')[1].split('"')[0]
+                        if 'op_name="' in line else "?")
+                sites.append((wb, coll, ob, n, mult, meta))
+            wm = H._WHILE_RE.search(line)
+            if wm:
+                visit(wm.group("body"), mult * mod.trip_count(wm.group("cond")),
+                      depth + 1)
+                continue
+            cm = H._CALLED_RE.search(line)
+            if cm:
+                for name in cm.group("names").replace("%", "").split(","):
+                    visit(name.strip(), mult, depth + 1)
+
+    if mod.entry:
+        visit(mod.entry, 1.0, 0)
+    sites.sort(reverse=True)
+    return sites
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--policy", default="fsdp_tp")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    from .dryrun import build_step
+    from .mesh import make_production_mesh
+    from . import specs
+    from .. import configs
+
+    cfg = configs.get(args.arch)
+    if specs.INPUT_SHAPES[args.shape][2] == "decode":
+        cfg = specs.serve_config(cfg, args.shape)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        jitted, a = build_step(cfg, args.shape, mesh, args.policy)
+        text = jitted.lower(*a).compile().as_text()
+    sites = collective_sites(text)
+    tot = sum(s[0] for s in sites) or 1.0
+    print(f"total wire bytes/device: {tot:.3e}  ({len(sites)} sites)")
+    for wb, coll, ob, n, mult, meta in sites[: args.top]:
+        print(f"{wb:9.2e} ({100*wb/tot:4.1f}%) {coll:18s} "
+              f"out={ob/1e6:9.1f}MB n={n:3d} x{mult:5.0f}  {meta[:120]}")
+
+
+if __name__ == "__main__":
+    main()

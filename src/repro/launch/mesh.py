@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips per pod (16×16), two pods = 512 chips.
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS first.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run) "
+            f"or on real hardware")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(*, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    devices = jax.devices()
+    data = len(devices) // model
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,80 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.common import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+# name -> (seq_len, global_batch, kind)
+INPUT_SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# dense-family archs need the sliding-window serve variant for long_500k
+# (DESIGN.md §5); SSM/hybrid run it natively.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def serve_config(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Adapt a config for an inference shape (sliding-window carve-out)."""
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct pytree for the step input batch."""
+    S, B, kind = INPUT_SHAPES[shape]
+    if kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            batch = {"tokens": SDS((B, S), jnp.int32)}
+        else:
+            batch = {"embeds": SDS((B, S, cfg.d_model), jnp.bfloat16),
+                     "positions": SDS((3, B, S), jnp.int32)}
+        if kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+        return batch
+    # decode: one new token at position S-1 over a cache of length S
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": SDS((B, 1), jnp.int32)}
+    else:
+        batch = {"embeds": SDS((B, 1, cfg.d_model), jnp.bfloat16)}
+    batch["position"] = SDS((), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: str):
+    S, B, kind = INPUT_SHAPES[shape]
+    assert kind == "decode"
+    return T.init_cache(cfg, B, S, abstract=True)
+
+
+def concrete_batch(cfg: ModelConfig, shape: str, key=None) -> dict:
+    """Materialized batch (smoke tests / examples) matching batch_specs."""
+    key = key if key is not None else jax.random.key(0)
+    specs = batch_specs(cfg, shape)
+
+    def fill(path, s):
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("tokens", "labels"):
+            return jax.random.randint(key, s.shape, 0,
+                                      max(2, cfg.vocab_size)).astype(s.dtype)
+        if name == "positions":
+            S = s.shape[-1]
+            return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                    s.shape)
+        if name == "position":
+            return jnp.int32(INPUT_SHAPES[shape][0] - 1)
+        return jax.random.normal(key, s.shape).astype(s.dtype)
+
+    return jax.tree_util.tree_map_with_path(fill, specs)

@@ -1,0 +1,148 @@
+"""GQA attention: chunked-causal for train/prefill (O(chunk·S) memory — no
+S×S materialization, mandatory for the 32k shapes), cached single-token for
+decode.  Sharding-friendly: plain einsums so GSPMD can partition heads /
+sequence; the Pallas flash kernel (kernels/flash_attention.py) is the
+TPU-optimized drop-in selected via ``impl="pallas"``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import apply_mrope, apply_rope, causal_mask_bias, rms_norm
+from .shard_ctx import shard
+
+
+def qkv_project(cfg: ModelConfig, p, x, positions):
+    """x: (B,S,d) -> q (B,S,H,hd), k,v (B,S,KV,hd), with RoPE applied."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.expand_kv and cfg.num_kv_heads < cfg.num_heads:
+        rep = cfg.num_heads // cfg.num_kv_heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> (B,KV,H/KV,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+    return jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / (hd ** 0.5)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,KV,G,Sq,Sk), v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    B, Sq, KV, G, hd = out.shape
+    return out.reshape(B, Sq, KV * G, hd)
+
+
+def causal_attention(cfg: ModelConfig, q, k, v, *, q_chunk: int = 512,
+                     window: int = 0):
+    """Chunked causal self-attention (training / prefill).
+
+    Scans over query chunks; each chunk attends to the full (or windowed)
+    prefix, so peak memory is O(q_chunk · S) instead of O(S²).
+    """
+    B, S, H, hd = q.shape
+    window = window or cfg.sliding_window
+    q_chunk = min(q_chunk, S)
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    k_pos = jnp.arange(S)
+
+    def one_chunk(ci):
+        q_pos = ci * q_chunk + jnp.arange(q_chunk)
+        qc = jax.lax.dynamic_slice_in_dim(q, ci * q_chunk, q_chunk, axis=1)
+        scores = _gqa_scores(qc, k)                       # (B,KV,G,qc,S)
+        bias = causal_mask_bias(q_pos, k_pos, window)     # (qc, S)
+        scores = scores.astype(jnp.float32) + bias
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return one_chunk_out(probs)
+
+    def one_chunk_out(probs):
+        return _gqa_out(probs, v)
+
+    def body(_, ci):
+        return None, one_chunk(ci)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, q_chunk, H, hd) -> (B, S, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def decode_attention(cfg: ModelConfig, q, k_cache, v_cache, cache_len):
+    """q: (B,1,H,hd); caches: (B,S,KV,hd) (new K/V already written).
+
+    Positions >= cache_len are masked.  Works with the cache sequence axis
+    sharded over the model axis: the softmax reduction over the sharded axis
+    lowers to an all-reduce under GSPMD.
+    """
+    B, S, KV, hd = k_cache.shape
+    scores = _gqa_scores(q, k_cache)                      # (B,KV,G,1,S)
+    pos = jnp.arange(S)
+    bias = jnp.where(pos < cache_len, 0.0, -jnp.inf).astype(jnp.float32)
+    scores = scores.astype(jnp.float32) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v_cache)                       # (B,1,H,hd)
+
+
+def attention_block(cfg: ModelConfig, p, x, positions, *, impl: str = "xla",
+                    window: int = 0, return_kv: bool = False):
+    """Full train/prefill attention sub-layer (no residual/norm).
+    With ``return_kv`` also returns the (k, v) tensors for cache fill."""
+    q, k, v = qkv_project(cfg, p, x, positions)
+    # §Perf "+attnb": reshard (q,k,v) batch over the whole mesh so the
+    # attention einsums have no cross-device contraction (GQA head counts
+    # rarely divide the model axis); resharded back after the output proj.
+    q = shard(q, "attn_batch")
+    k = shard(k, "attn_batch")
+    v = shard(v, "attn_batch")
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True,
+                                   window=window or cfg.sliding_window)
+    else:
+        out = causal_attention(cfg, q, k, v, window=window)
+    B, S = x.shape[:2]
+    out = shard(out.reshape(B, S, cfg.q_dim), "act_btd_full")
+    y = out @ p["wo"]
+    return (y, (k, v)) if return_kv else y
+
+
+def decode_attention_block(cfg: ModelConfig, p, x, cache, position, *,
+                           window: int = 0):
+    """One-token decode step.  cache: {"k": (B,S,KV,hd), "v": ...};
+    ``position`` is the absolute position of the new token; with a sliding
+    window the cache is a ring buffer of size window."""
+    B = x.shape[0]
+    pos_b = jnp.broadcast_to(position, (B, 1))
+    if cfg.mrope:
+        pos_in = jnp.broadcast_to(position, (3, B, 1))
+        q, k, v = qkv_project(cfg, p, x, pos_in)
+    else:
+        q, k, v = qkv_project(cfg, p, x, pos_b)
+    S = cache["k"].shape[1]
+    slot = jnp.mod(jnp.asarray(position), S).astype(jnp.int32)  # ring buffer
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cache_len = jnp.minimum(position + 1, S)
+    out = decode_attention(cfg, q, k_cache, v_cache, cache_len)
+    y = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    return y, {"k": k_cache, "v": v_cache}

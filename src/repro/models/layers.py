@@ -1,0 +1,72 @@
+"""Shared building blocks: norms, FFN, RoPE / M-RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32 broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    ang = ang[..., None, :]                             # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL M-RoPE [arXiv:2409.12191]: the rotary half-dims are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  positions3: (3, ..., S) int32.  sections sums to head_dim//2."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    # build per-frequency position source by section
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=half)       # (half,)
+    # positions3: (3, B, S) -> select per frequency -> (B, S, half)
+    pos = jnp.take(positions3, sec_id, axis=0)          # (half, B, S) via axis0? no:
+    # jnp.take with axis=0 gives (half, B, S); move to (B, S, half)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)
+    ang = pos * freqs                                   # (B, S, half)
+    ang = ang[..., None, :]                             # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask_bias(q_pos, k_pos, window: int = 0):
+    """(..., Sq, Sk) additive bias: -inf where k>q or (window>0 and q-k>=window)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)

@@ -1,0 +1,105 @@
+"""Mamba-1 block (falcon-mamba-7b [arXiv:2410.05355]).
+
+Selective scan is a time-sequential ``lax.scan`` with a small carried state
+(B, d_inner, ssm_state): inputs to the recurrence are computed on the fly in
+the scan body, so nothing O(S·d_inner·state) is ever materialized.  The
+Pallas kernel (kernels/ssm_scan.py) is the TPU-blocked variant selected via
+``impl="pallas"``; decode is a single recurrence step on a carried state —
+O(1) in context length, which is why falcon-mamba runs long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+
+def _causal_conv(x, conv_w, conv_b, state=None):
+    """Depthwise causal conv over time.  x: (B,S,di), conv_w: (di, W).
+    If ``state`` is given ((B, W-1, di)), runs in streaming mode and returns
+    (y, new_state)."""
+    W = conv_w.shape[1]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)          # (B, W-1+S, di)
+        new_state = xin[:, -(W - 1):, :]
+    else:
+        pad = jnp.zeros_like(x[:, : W - 1])
+        xin = jnp.concatenate([pad, x], axis=1)
+        new_state = None
+    # y[:, t, c] = sum_w xin[:, t+w, c] * conv_w[c, w]
+    ys = sum(xin[:, w:w + x.shape[1], :] * conv_w[:, w] for w in range(W))
+    y = ys + conv_b
+    return (y, new_state) if state is not None else y
+
+
+def _ssm_inputs(cfg: ModelConfig, p, u):
+    """u: (B,S,di) post-conv activations -> (delta, B_ssm, C_ssm).
+    delta: (B,S,di); B_ssm/C_ssm: (B,S,state)."""
+    proj = u @ p["x_proj"]                                  # (B,S,R+2N)
+    R, N = cfg.dt_rank, cfg.ssm_state
+    dt, B_ssm, C_ssm = jnp.split(proj, [R, R + N], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])   # (B,S,di)
+    return delta, B_ssm, C_ssm
+
+
+def selective_scan(cfg: ModelConfig, p, u, delta, B_ssm, C_ssm, h0=None):
+    """Returns (y (B,S,di), h_final (B,di,N)).  A = -exp(A_log)."""
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di, N)
+    Bsz, S, di = u.shape
+    N = cfg.ssm_state
+    h = h0 if h0 is not None else jnp.zeros((Bsz, di, N), jnp.float32)
+
+    def body(h, xs):
+        u_t, d_t, b_t, c_t = xs                             # (B,di),(B,di),(B,N),(B,N)
+        dA = jnp.exp(d_t[..., None].astype(jnp.float32) * A)          # (B,di,N)
+        dBu = (d_t * u_t)[..., None].astype(jnp.float32) \
+            * b_t[:, None, :].astype(jnp.float32)                     # (B,di,N)
+        h = dA * h + dBu
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y_t.astype(u.dtype)
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(delta, 1, 0),
+          jnp.moveaxis(B_ssm, 1, 0), jnp.moveaxis(C_ssm, 1, 0))
+    h, ys = jax.lax.scan(body, h, xs)
+    y = (jnp.moveaxis(ys, 0, 1).astype(jnp.float32)
+         + u.astype(jnp.float32) * p["D"]).astype(u.dtype)  # skip connection
+    return y, h
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, impl: str = "xla",
+                return_state: bool = False):
+    """Full mamba mixing block (no residual/norm).  x: (B,S,d) -> (B,S,d).
+    With ``return_state`` also returns the streaming state (prefill)."""
+    # separate u/z projections: splitting a model-sharded packed (d, 2*di)
+    # output misaligns shard boundaries and costs collective-permutes per
+    # layer (§Perf falcon iteration 2)
+    u_raw = x @ p["in_proj_u"]                              # (B,S,di)
+    z = x @ p["in_proj_z"]                                  # (B,S,di)
+    u = _causal_conv(u_raw, p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u)
+    delta, B_ssm, C_ssm = _ssm_inputs(cfg, p, u)
+    if impl == "pallas" and not return_state:
+        from ..kernels import ops as kops
+        y = kops.ssm_scan(u, delta, B_ssm, C_ssm, p["A_log"], p["D"])
+        h = None
+    else:
+        y, h = selective_scan(cfg, p, u, delta, B_ssm, C_ssm)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        W = p["conv_w"].shape[1]
+        return out, {"conv": u_raw[:, -(W - 1):, :], "h": h}
+    return out
+
+
+def mamba_decode_step(cfg: ModelConfig, p, x, state):
+    """x: (B,1,d); state: {"conv": (B,W-1,di), "h": (B,di,N)} -> (y, state)."""
+    u = x @ p["in_proj_u"]
+    z = x @ p["in_proj_z"]
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    u = jax.nn.silu(u)
+    delta, B_ssm, C_ssm = _ssm_inputs(cfg, p, u)
+    y, h = selective_scan(cfg, p, u, delta, B_ssm, C_ssm, h0=state["h"])
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {"conv": conv_state, "h": h}

@@ -1,0 +1,85 @@
+"""Top-k Mixture-of-Experts with GShard-style grouped einsum dispatch.
+
+TPU-native adaptation (DESIGN.md §4): tokens are reshaped into groups of
+``moe_group_size``; dispatch/combine tensors are (G, S_g, E, C) with capacity
+C = S_g·k/E·capacity_factor, so their footprint is tokens·S_g·k·cap — linear
+in token count (quadratic only in the small group size).  All data movement
+is einsums, which GSPMD partitions cleanly: groups shard over the data axes,
+experts over the model axis, and the G→E resharding in the dispatch einsum
+lowers to an all-to-all.  FLOPs are proportional to *active* experts
+(capacity-bounded), not to E — so roofline compute terms reflect
+6·N_active·D, with dropped-token behaviour identical to GShard/Switch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+
+def _capacity(cfg: ModelConfig, s_g: int) -> int:
+    c = int(s_g * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts)
+    return max(cfg.experts_per_token, min(s_g, c))
+
+
+def route(cfg: ModelConfig, router_w, x_g):
+    """x_g: (G, S_g, d) -> (combine (G,S_g,E,C), dispatch, aux losses)."""
+    G, S_g, d = x_g.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(cfg, S_g)
+    logits = (x_g.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                    # (G,S,K)
+    # renormalize top-k gates (standard for k>1)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)          # (G,S,K,E)
+    # position of each (token, slot) within its expert queue, counted over
+    # the flattened (S,K) order
+    flat = onehot.reshape(G, S_g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                              # (G,S*K,E)
+    pos = pos.reshape(G, S_g, K, E)
+    in_cap = (pos < C)
+    pos_id = jnp.einsum("gske,gske->gsk", pos, onehot)                 # (G,S,K)
+    kept = jnp.einsum("gske,gske->gsk", in_cap.astype(jnp.float32), onehot)
+
+    cap_onehot = jax.nn.one_hot(pos_id.astype(jnp.int32), C,
+                                dtype=jnp.float32)                     # (G,S,K,C)
+    # combine[g,s,e,c] = sum_k gate * onehot_e * onehot_c * kept
+    combine = jnp.einsum("gsk,gske,gskc->gsec",
+                         gate_vals * kept, onehot, cap_onehot)
+    dispatch = (combine > 0).astype(x_g.dtype)
+    combine = combine.astype(jnp.float32)
+
+    # Switch-style load-balance loss + router z-loss
+    density = jnp.mean(onehot.sum(axis=2), axis=1)                     # (G,E) frac tokens
+    density_p = jnp.mean(probs, axis=1)                                # (G,E)
+    lb_loss = E * jnp.mean(jnp.sum(density * density_p, axis=-1))
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return combine, dispatch, {"load_balance": lb_loss, "router_z": z_loss}
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux).  p: router (d,E); w_gate/up (E,d,f); w_down (E,f,d)."""
+    B, S, d = x.shape
+    T = B * S
+    # largest group size <= moe_group_size that divides the token count
+    S_g = min(cfg.moe_group_size, T)
+    while T % S_g:
+        S_g -= 1
+    G = T // S_g
+    x_g = x.reshape(G, S_g, d)
+    combine, dispatch, aux = route(cfg, p["router"], x_g)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, x_g)            # (E,G,C,d)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_down"])          # (E,G,C,d)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), expert_out)
+    y = y.reshape(B, S, d)
+    if cfg.shared_expert and cfg.d_ff:
+        from .layers import swiglu
+        y = y + swiglu(x, p["shared_w_gate"], p["shared_w_up"], p["shared_w_down"])
+    return y, aux

@@ -1,0 +1,74 @@
+"""Griffin recurrent block with the Real-Gated LRU (RG-LRU) —
+recurrentgemma-9b [arXiv:2402.19427].
+
+    r_t = sigmoid(W_a x_t)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t)                 (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)      (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Diagonal linear recurrence → time-sequential lax.scan with an O(B·width)
+carry; decode is one recurrence step (O(1) in context), so recurrentgemma
+runs long_500k natively (the interleaved local-attention blocks are bounded
+by their window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .mamba import _causal_conv
+
+_C = 8.0
+
+
+def rg_lru(p, x, h0=None, *, impl: str = "xla"):
+    """x: (B,S,W) -> (y, h_final).  Gates are per-channel diagonal."""
+    B, S, W = x.shape
+    r = jax.nn.sigmoid(x @ p["w_a"])                     # (B,S,W)
+    i = jax.nn.sigmoid(x @ p["w_x"])
+    log_a = -_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32)) \
+        * r.astype(jnp.float32)                          # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    if impl == "pallas" and h0 is None:
+        from ..kernels import ops as kops
+        ys = kops.rglru_scan(a.astype(x.dtype), gated.astype(x.dtype))
+        return ys, ys[:, -1, :].astype(jnp.float32)
+    h = h0 if h0 is not None else jnp.zeros((B, W), jnp.float32)
+
+    def body(h, xs):
+        a_t, g_t = xs
+        h = a_t * h + g_t
+        return h, h.astype(x.dtype)
+
+    h, ys = jax.lax.scan(body, h, (jnp.moveaxis(a, 1, 0),
+                                   jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def recurrent_block(cfg: ModelConfig, p, x, state=None, *,
+                    return_state: bool = False, impl: str = "xla"):
+    """Griffin temporal-mixing block.  x: (B,S,d).
+
+    Two branches: (linear → conv1d → RG-LRU) ⊙ (linear → gelu), then out-proj.
+    With ``state`` ({"conv": (B,W-1,w), "h": (B,w)}) runs streaming decode and
+    returns (y, new_state); with ``return_state`` (prefill) returns the final
+    streaming state alongside the full-sequence output.
+    """
+    u_raw = x @ p["in_proj_rnn"]                         # (B,S,w)
+    g = jax.nn.gelu(x @ p["in_proj_gate"])               # (B,S,w)
+    if state is not None:
+        u, conv_state = _causal_conv(u_raw, p["conv_w"], p["conv_b"],
+                                     state["conv"])
+        y, h = rg_lru(p, u, h0=state["h"])
+        out = (y * g) @ p["out_proj"]
+        return out, {"conv": conv_state, "h": h}
+    u = _causal_conv(u_raw, p["conv_w"], p["conv_b"])
+    y, h = rg_lru(p, u, impl=impl)
+    out = (y * g) @ p["out_proj"]
+    if return_state:
+        W = p["conv_w"].shape[1]
+        return out, {"conv": u_raw[:, -(W - 1):, :], "h": h}
+    return out

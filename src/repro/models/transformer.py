@@ -1,0 +1,507 @@
+"""Model assembly for all assigned architecture families.
+
+Layer stacks are *scanned* (stacked parameters, ``jax.lax.scan`` over the
+leading layer axis) so the HLO stays O(1) in depth — essential both for
+compile time on the 512-device dry-run and for remat-friendly training.
+Hybrid models (RecurrentGemma) scan over super-blocks of their layer pattern
+(rec, rec, attn) with the non-divisible tail unrolled.
+
+Vocabulary sizes are padded to multiples of 256 for clean sharding over the
+model axis (``vocab_padded``); labels never reference pad ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, decode_attention_block
+from .common import ModelConfig
+from .layers import dense_init, rms_norm, swiglu
+from .mamba import mamba_block, mamba_decode_step
+from .moe import moe_block
+from .rglru import recurrent_block
+from .shard_ctx import shard
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+# ===================================================================== init
+def _init_attn(cfg: ModelConfig, key, extra_mlp: bool, n: int):
+    ks = jax.random.split(key, 10)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "norm1": jnp.zeros((n, d), jnp.float32),
+        "wq": dense_init(ks[0], (n, d, qd), 1, cfg.dtype),
+        "wk": dense_init(ks[1], (n, d, kvd), 1, cfg.dtype),
+        "wv": dense_init(ks[2], (n, d, kvd), 1, cfg.dtype),
+        "wo": dense_init(ks[3], (n, qd, d), 1, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((n, cfg.head_dim), jnp.float32)
+        p["k_norm"] = jnp.zeros((n, cfg.head_dim), jnp.float32)
+    if extra_mlp:
+        p.update({
+            "norm2": jnp.zeros((n, d), jnp.float32),
+            "w_gate": dense_init(ks[4], (n, d, cfg.d_ff), 1, cfg.dtype),
+            "w_up": dense_init(ks[5], (n, d, cfg.d_ff), 1, cfg.dtype),
+            "w_down": dense_init(ks[6], (n, cfg.d_ff, d), 1, cfg.dtype),
+        })
+    return p
+
+
+def _init_moe(cfg: ModelConfig, key, n: int):
+    ks = jax.random.split(key, 8)
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    p = _init_attn(cfg, ks[0], extra_mlp=False, n=n)
+    p.update({
+        "norm2": jnp.zeros((n, d), jnp.float32),
+        "router": dense_init(ks[1], (n, d, E), 1, jnp.float32),
+        "w_gate": dense_init(ks[2], (n, E, d, f), 2, cfg.dtype),
+        "w_up": dense_init(ks[3], (n, E, d, f), 2, cfg.dtype),
+        "w_down": dense_init(ks[4], (n, E, f, d), 2, cfg.dtype),
+    })
+    if cfg.shared_expert and cfg.d_ff:
+        p.update({
+            "shared_w_gate": dense_init(ks[5], (n, d, cfg.d_ff), 1, cfg.dtype),
+            "shared_w_up": dense_init(ks[6], (n, d, cfg.d_ff), 1, cfg.dtype),
+            "shared_w_down": dense_init(ks[7], (n, cfg.d_ff, d), 1, cfg.dtype),
+        })
+    return p
+
+
+def _init_ssm(cfg: ModelConfig, key, n: int):
+    ks = jax.random.split(key, 8)
+    d, di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.conv_width)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, None],
+                 (n, di, 1))
+    return {
+        "norm1": jnp.zeros((n, d), jnp.float32),
+        "in_proj_u": dense_init(ks[0], (n, d, di), 1, cfg.dtype),
+        "in_proj_z": dense_init(ks[5], (n, d, di), 1, cfg.dtype),
+        "conv_w": dense_init(ks[1], (n, di, W), 2, cfg.dtype),
+        "conv_b": jnp.zeros((n, di), cfg.dtype),
+        "x_proj": dense_init(ks[2], (n, di, R + 2 * N), 1, cfg.dtype),
+        "dt_proj": dense_init(ks[3], (n, R, di), 1, cfg.dtype),
+        "dt_bias": jnp.zeros((n, di), cfg.dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((n, di), jnp.float32),
+        "out_proj": dense_init(ks[4], (n, di, d), 1, cfg.dtype),
+    }
+
+
+def _init_rec(cfg: ModelConfig, key, n: int):
+    ks = jax.random.split(key, 10)
+    d, w, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        "norm1": jnp.zeros((n, d), jnp.float32),
+        "in_proj_rnn": dense_init(ks[0], (n, d, w), 1, cfg.dtype),
+        "in_proj_gate": dense_init(ks[1], (n, d, w), 1, cfg.dtype),
+        "conv_w": dense_init(ks[2], (n, w, W), 2, cfg.dtype),
+        "conv_b": jnp.zeros((n, w), cfg.dtype),
+        "w_a": dense_init(ks[3], (n, w, w), 1, cfg.dtype),
+        "w_x": dense_init(ks[4], (n, w, w), 1, cfg.dtype),
+        "lambda_p": jnp.full((n, w), 0.5, jnp.float32),
+        "out_proj": dense_init(ks[5], (n, w, d), 1, cfg.dtype),
+        "norm2": jnp.zeros((n, d), jnp.float32),
+        "w_gate": dense_init(ks[6], (n, d, cfg.d_ff), 1, cfg.dtype),
+        "w_up": dense_init(ks[7], (n, d, cfg.d_ff), 1, cfg.dtype),
+        "w_down": dense_init(ks[8], (n, cfg.d_ff, d), 1, cfg.dtype),
+    }
+
+
+_STACK_INIT = {"attn_mlp": functools.partial(_init_attn, extra_mlp=True),
+               "attn": functools.partial(_init_attn, extra_mlp=True),
+               "moe": _init_moe, "ssm": _init_ssm, "rec": _init_rec}
+
+
+def stack_counts(cfg: ModelConfig) -> dict:
+    counts: dict = {}
+    for t in cfg.layer_types():
+        counts[t] = counts.get(t, 0) + 1
+    return counts
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    d, Vp = cfg.d_model, vocab_padded(cfg)
+    params: dict = {"final_norm": jnp.zeros((d,), jnp.float32)}
+    if cfg.input_mode == "tokens":
+        params["embed"] = dense_init(ks[0], (Vp, d), 1, cfg.dtype)
+    params["lm_head"] = dense_init(ks[1], (d, Vp), 0, cfg.dtype)
+    for i, (t, n) in enumerate(sorted(stack_counts(cfg).items())):
+        params[f"stack_{t}"] = _STACK_INIT[t](cfg, ks[2 + i], n=n)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.key(0))
+
+
+# =================================================================== forward
+def _layer_body(cfg: ModelConfig, t: str, p, x, positions, impl: str):
+    """One layer of type ``t``: pre-norm residual block(s)."""
+    x = shard(x, "act_btd")
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if t in ("attn_mlp", "attn"):
+        window = cfg.local_window if t == "attn" else cfg.sliding_window
+        x = x + attention_block(cfg, p, h, positions, impl=impl, window=window)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+        return x, {}
+    if t == "moe":
+        x = x + attention_block(cfg, p, h, positions, impl=impl,
+                                window=cfg.sliding_window)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, aux = moe_block(cfg, p, h2)
+        return x + y, aux
+    if t == "ssm":
+        return x + mamba_block(cfg, p, h, impl=impl), {}
+    if t == "rec":
+        x = x + recurrent_block(cfg, p, h, impl=impl)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+        return x, {}
+    raise ValueError(t)
+
+
+def _scan_stack(cfg: ModelConfig, t: str, stack, x, positions, impl: str,
+                remat: bool, n_take: int | None = None, offset: int = 0):
+    """Scan a homogeneous stack over its leading layer axis."""
+    if n_take is not None:
+        stack = jax.tree_util.tree_map(
+            lambda a: jax.lax.slice_in_dim(a, offset, offset + n_take), stack)
+
+    def body(carry, layer_p):
+        out, aux = _layer_body(cfg, t, layer_p, carry, positions, impl)
+        return out, aux
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, stack)
+    aux = {k: jnp.sum(v) for k, v in auxs.items()} if auxs else {}
+    return x, aux
+
+
+def hidden_forward(cfg: ModelConfig, params, inputs, positions, *,
+                   impl: str = "xla", remat: bool = True):
+    """inputs: (B,S,d) embeddings (already looked-up / stub-provided)."""
+    x = inputs
+    aux_total: dict = {}
+    types = cfg.layer_types()
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_super = len(types) // len(pat)
+        per_block = {t: pat.count(t) for t in set(pat)}
+        # head: scan over super-blocks
+        cursor = {t: 0 for t in per_block}
+
+        def super_body(carry, idx):
+            x = carry
+            aux_acc = {}
+            for j, t in enumerate(pat):
+                stack = params[f"stack_{t}"]
+                layer_p = jax.tree_util.tree_map(
+                    lambda a, t=t, j=j: a[idx * per_block[t] + pat[:j].count(t)],
+                    stack)
+                x, aux = _layer_body(cfg, t, layer_p, x, positions, impl)
+                for k, v in aux.items():
+                    aux_acc[k] = aux_acc.get(k, 0.0) + v
+            return x, aux_acc
+
+        body = jax.checkpoint(super_body, prevent_cse=False) if remat else super_body
+        x, auxs = jax.lax.scan(body, x, jnp.arange(n_super))
+        aux_total = {k: jnp.sum(v) for k, v in auxs.items()} if auxs else {}
+        # tail: remaining layers, unrolled
+        used = {t: n_super * per_block[t] for t in per_block}
+        for t in [pat[i] for i in range(len(types) - n_super * len(pat))]:
+            layer_p = jax.tree_util.tree_map(lambda a: a[used[t]],
+                                             params[f"stack_{t}"])
+            x, aux = _layer_body(cfg, t, layer_p, x, positions, impl)
+            used[t] += 1
+    else:
+        t = types[0]
+        x, aux_total = _scan_stack(cfg, t, params[f"stack_{t}"], x, positions,
+                                   impl, remat)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        B, S = batch["tokens"].shape
+    else:
+        x = batch["embeds"].astype(cfg.dtype)
+        B, S = x.shape[:2]
+    if cfg.mrope:
+        positions = batch["positions"]          # (3, B, S)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return shard(x, "act_btd"), positions
+
+
+def lm_loss(cfg: ModelConfig, h, lm_head, labels, *, chunk: int = 512):
+    """Chunked cross-entropy over the (padded) vocabulary.
+
+    Scans over sequence chunks so peak logits memory is O(B·chunk·V), with
+    the chunk body rematerialized in the backward pass.
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0
+
+    def chunk_loss(hc, yc):
+        hc = shard(hc, "act_btd")
+        logits = shard((hc @ lm_head).astype(jnp.float32), "logits")  # (B,c,Vp)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+
+    def body(acc, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        return acc + chunk_loss(hc, yc), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n_chunks))
+    return total / (B * S)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, impl: str = "xla",
+            remat: bool = True, aux_coef: float = 0.01):
+    x, positions = embed_inputs(cfg, params, batch)
+    h, aux = hidden_forward(cfg, params, x, positions, impl=impl, remat=remat)
+    loss = lm_loss(cfg, h, params["lm_head"], batch["labels"])
+    metrics = {"ce_loss": loss}
+    if "load_balance" in aux:
+        loss = loss + aux_coef * aux["load_balance"] \
+            + 0.001 * aux.get("router_z", 0.0)
+        metrics.update(aux)
+    return loss, metrics
+
+
+# =================================================================== prefill
+def _cache_window(cfg: ModelConfig, t: str, S: int) -> int:
+    win = S
+    if t == "attn" and cfg.local_window:
+        win = min(win, cfg.local_window)
+    if cfg.sliding_window:
+        win = min(win, cfg.sliding_window)
+    return win
+
+
+def _kv_cache_slice(k, v, S: int, win: int):
+    """Cache of capacity ``win`` holding the last min(S, win) tokens, laid
+    out so the entry for absolute position p sits at ring slot p % win
+    (decode_attention_block's invariant).  If S < win the cache is padded."""
+    if win > S:
+        pad = win - S
+        k_t = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_t = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k_t, "v": v_t}
+    k_t, v_t = k[:, S - win:], v[:, S - win:]
+    shift = S % win
+    if shift:
+        k_t = jnp.roll(k_t, shift, axis=1)
+        v_t = jnp.roll(v_t, shift, axis=1)
+    return {"k": k_t, "v": v_t}
+
+
+def _layer_body_prefill(cfg: ModelConfig, t: str, p, x, positions, impl: str,
+                        cache_len: int | None = None):
+    S = x.shape[1]
+    x = shard(x, "act_btd")
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if t in ("attn_mlp", "attn", "moe"):
+        window = cfg.local_window if t == "attn" else cfg.sliding_window
+        y, (k, v) = attention_block(cfg, p, h, positions, impl=impl,
+                                    window=window, return_kv=True)
+        x = x + y
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if t == "moe":
+            y2, _ = moe_block(cfg, p, h2)
+        else:
+            y2 = swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+        win = _cache_window(cfg, t, cache_len or S)
+        return x + y2, _kv_cache_slice(k, v, S, win)
+    if t == "ssm":
+        y, st = mamba_block(cfg, p, h, impl=impl, return_state=True)
+        return x + y, st
+    if t == "rec":
+        y, st = recurrent_block(cfg, p, h, return_state=True)
+        x = x + y
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"]), st
+    raise ValueError(t)
+
+
+def prefill_step(cfg: ModelConfig, params, batch, *, impl: str = "xla",
+                 cache_len: int | None = None):
+    """Process a full prompt, returning (last-token logits (B,Vp), cache).
+
+    The cache layout matches init_cache / decode_step so generation can
+    continue at position = prompt length.
+    """
+    x, positions = embed_inputs(cfg, params, batch)
+    types = cfg.layer_types()
+
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        n_super = len(types) // len(pat)
+        per_block = {t: pat.count(t) for t in set(pat)}
+
+        def super_body(carry, idx):
+            x = carry
+            slices: dict = {t: [] for t in set(pat)}
+            for j, t in enumerate(pat):
+                stack = params[f"stack_{t}"]
+                layer_p = jax.tree_util.tree_map(
+                    lambda a, t=t, j=j: a[idx * per_block[t] + pat[:j].count(t)],
+                    stack)
+                x, csl = _layer_body_prefill(cfg, t, layer_p, x, positions, impl,
+                                             cache_len)
+                slices[t].append(csl)
+            stacked = {t: jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *slices[t]) for t in slices}
+            return x, stacked
+
+        x, caches = jax.lax.scan(super_body, x, jnp.arange(n_super))
+        # caches[t] leaves: (n_super, per_block, ...) -> (n_head, ...)
+        cache = {}
+        for t in set(pat):
+            cache[f"stack_{t}"] = jax.tree_util.tree_map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), caches[t])
+        # tail layers, unrolled
+        used = {t: n_super * per_block[t] for t in per_block}
+        for t in [pat[i] for i in range(len(types) - n_super * len(pat))]:
+            layer_p = jax.tree_util.tree_map(lambda a: a[used[t]],
+                                             params[f"stack_{t}"])
+            x, csl = _layer_body_prefill(cfg, t, layer_p, x, positions, impl,
+                                             cache_len)
+            cache[f"stack_{t}"] = jax.tree_util.tree_map(
+                lambda full, part: jnp.concatenate([full, part[None]], axis=0),
+                cache[f"stack_{t}"], csl)
+            used[t] += 1
+    else:
+        t = types[0]
+
+        def body(carry, layer_p):
+            out, csl = _layer_body_prefill(cfg, t, layer_p, carry, positions,
+                                           impl, cache_len)
+            return out, csl
+
+        x, stack_cache = jax.lax.scan(body, x, params[f"stack_{t}"])
+        cache = {f"stack_{t}": stack_cache}
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, cache
+
+
+# ==================================================================== decode
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               *, abstract: bool = False):
+    """Cache pytree, stacked per layer-type stack.  ``cache_len`` is the KV
+    window actually materialized (sliding_window/local_window bound it)."""
+    counts = stack_counts(cfg)
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+         (lambda s, dt: jnp.zeros(s, dt))
+    cache: dict = {}
+    for t, n in counts.items():
+        if t in ("attn_mlp", "moe", "attn"):
+            win = cache_len
+            if t == "attn" and cfg.local_window:
+                win = min(cache_len, cfg.local_window)
+            if cfg.sliding_window:
+                win = min(win, cfg.sliding_window)
+            kvh = cfg.effective_kv_heads
+            cache[f"stack_{t}"] = {
+                "k": mk((n, batch_size, win, kvh, cfg.head_dim), cfg.dtype),
+                "v": mk((n, batch_size, win, kvh, cfg.head_dim), cfg.dtype)}
+        elif t == "ssm":
+            cache["stack_ssm"] = {
+                "conv": mk((n, batch_size, cfg.conv_width - 1, cfg.d_inner),
+                           cfg.dtype),
+                "h": mk((n, batch_size, cfg.d_inner, cfg.ssm_state),
+                        jnp.float32)}
+        elif t == "rec":
+            cache["stack_rec"] = {
+                "conv": mk((n, batch_size, cfg.conv_width - 1, cfg.lru_width),
+                           cfg.dtype),
+                "h": mk((n, batch_size, cfg.lru_width), jnp.float32)}
+    return cache
+
+
+def _decode_layer(cfg: ModelConfig, t: str, p, x, cache_slice, position):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if t in ("attn_mlp", "attn", "moe"):
+        y, new_kv = decode_attention_block(
+            cfg, p, h, cache_slice, position,
+            window=cfg.local_window if t == "attn" else cfg.sliding_window)
+        x = x + y
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if t == "moe":
+            y2, _ = moe_block(cfg, p, h2)
+        else:
+            y2 = swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+        return x + y2, new_kv
+    if t == "ssm":
+        y, new_state = mamba_decode_step(cfg, p, h, cache_slice)
+        return x + y, new_state
+    if t == "rec":
+        y, new_state = recurrent_block(cfg, p, h, state=cache_slice)
+        x = x + y
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+        return x, new_state
+    raise ValueError(t)
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """One-token decode.  batch: {"tokens": (B,1) | "embeds": (B,1,d),
+    "position": scalar int32}.  Returns (logits (B, Vp), new_cache)."""
+    position = batch["position"]
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(cfg.dtype)
+    types = cfg.layer_types()
+
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        used = {t: 0 for t in set(pat)}
+        new_cache = jax.tree_util.tree_map(lambda a: a, cache)  # shallow copy
+        for t in types:
+            i = used[t]
+            p = jax.tree_util.tree_map(lambda a: a[i], params[f"stack_{t}"])
+            csl = jax.tree_util.tree_map(lambda a: a[i], cache[f"stack_{t}"])
+            x, new_csl = _decode_layer(cfg, t, p, x, csl, position)
+            new_cache[f"stack_{t}"] = jax.tree_util.tree_map(
+                lambda full, part, i=i: full.at[i].set(part),
+                new_cache[f"stack_{t}"], new_csl)
+            used[t] += 1
+    else:
+        t = types[0]
+
+        def body(carry, xs):
+            p, csl = xs
+            out, new_csl = _decode_layer(cfg, t, p, carry, csl, position)
+            return out, new_csl
+
+        x, new_stack = jax.lax.scan(body, x,
+                                    (params[f"stack_{t}"], cache[f"stack_{t}"]))
+        new_cache = dict(cache)
+        new_cache[f"stack_{t}"] = new_stack
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,34 @@
+"""Adagrad (Duchi et al. 2011) — the paper's stochastic baseline.  Unlike the
+batch optimizers it consumes *mini-batches* (resampled i.i.d.), which is
+exactly the data-access pattern BET avoids; the simulated time model charges
+it per-access accordingly (core/timemodel.py)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .api import BatchOptimizer, Objective
+
+
+@dataclasses.dataclass(frozen=True)
+class Adagrad(BatchOptimizer):
+    name: str = "adagrad"
+    lr: float = 0.1
+    eps: float = 1e-8
+
+    def init(self, params):
+        return {"acc": jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)}
+
+    def step(self, params, state, objective: Objective, data):
+        f0, g = jax.value_and_grad(objective)(params, data)
+        acc = jax.tree_util.tree_map(
+            lambda a, gi: a + gi.astype(jnp.float32) ** 2, state["acc"], g)
+        params = jax.tree_util.tree_map(
+            lambda p, gi, a: (p.astype(jnp.float32)
+                              - self.lr * gi.astype(jnp.float32)
+                              / (jnp.sqrt(a) + self.eps)).astype(p.dtype),
+            params, g, acc)
+        return params, {"acc": acc}, {"f": f0}

@@ -1,0 +1,74 @@
+"""AdamW — not in the paper; provided for the beyond-paper LM training path
+(BET as an outer data schedule around a standard LM optimizer)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .api import BatchOptimizer, Objective
+
+
+def adamw_init(params):
+    z = lambda: jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+    return {"m": z(), "v": z(), "t": jnp.int32(0)}
+
+
+def adamw_update(params, grads, state, *, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0):
+    """Pure functional AdamW update (shared by the AdamW BatchOptimizer and
+    the pjit LM train step)."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda mi, gi: b1 * mi + (1 - b1) * gi.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vi, gi: b2 * vi + (1 - b2) * gi.astype(jnp.float32) ** 2,
+        state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, mi, vi):
+        step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        out = p.astype(jnp.float32) - step - lr * weight_decay * p.astype(jnp.float32)
+        return out.astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW(BatchOptimizer):
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        z = lambda: jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+        return {"m": z(), "v": z(), "t": jnp.int32(0)}
+
+    def step(self, params, state, objective: Objective, data):
+        f0, g = jax.value_and_grad(objective)(params, data)
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda mi, gi: self.b1 * mi + (1 - self.b1) * gi.astype(jnp.float32),
+            state["m"], g)
+        v = jax.tree_util.tree_map(
+            lambda vi, gi: self.b2 * vi + (1 - self.b2) * gi.astype(jnp.float32) ** 2,
+            state["v"], g)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+
+        def upd(p, mi, vi):
+            step = self.lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + self.eps)
+            out = p.astype(jnp.float32) - step - self.lr * self.weight_decay * p.astype(jnp.float32)
+            return out.astype(p.dtype)
+
+        params = jax.tree_util.tree_map(upd, params, m, v)
+        return params, {"m": m, "v": v, "t": t}, {"f": f0}

@@ -1,0 +1,136 @@
+"""Common interface for inner batch optimizers.
+
+The paper (§3.1) works with *linear optimizers*: linearly-convergent methods
+whose per-iteration cost is linear in the window size.  Every optimizer here
+implements
+
+    state  = opt.init(params)
+    params, state, aux = opt.step(params, state, objective, data)
+    state  = opt.reset_memory(state)      # called at every batch expansion
+
+where ``objective(params, data) -> scalar`` is the full-window regularized
+loss and ``data`` is a pytree of arrays whose leading axis is the window.
+``reset_memory`` drops cross-iteration memory (CG direction, L-BFGS history)
+that becomes invalid when the loss changes from f̂_t to f̂_{t+1} (App. A.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Objective = Callable[[Any, Any], jnp.ndarray]
+
+
+# ----------------------------------------------------------------- tree math
+def tree_dot(a, b):
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, c):
+    return jax.tree_util.tree_map(lambda x: (c * x.astype(jnp.float32)).astype(x.dtype), a)
+
+
+def tree_axpy(c, x, y):
+    """y + c*x, preserving y's dtypes."""
+    return jax.tree_util.tree_map(
+        lambda xi, yi: (yi.astype(jnp.float32) + c * xi.astype(jnp.float32)).astype(yi.dtype),
+        x, y)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+# ------------------------------------------------------------- line searches
+def armijo_line_search(objective: Objective, params, data, direction, g,
+                       *, f0=None, alpha0: float = 1.0, c1: float = 1e-4,
+                       shrink: float = 0.5, max_steps: int = 25):
+    """Backtracking Armijo search along ``direction``.
+
+    Returns (alpha, f_new, n_evals).  Runs as a lax.while_loop so it can live
+    inside jit.  Falls back to alpha=0 (no movement) if max_steps exhausted
+    and no decrease found.
+    """
+    if f0 is None:
+        f0 = objective(params, data)
+    slope = tree_dot(g, direction)  # should be negative for a descent dir
+
+    def cond(carry):
+        alpha, f_new, it, done = carry
+        return jnp.logical_and(~done, it < max_steps)
+
+    def body(carry):
+        alpha, _, it, _ = carry
+        f_new = objective(tree_axpy(alpha, direction, params), data)
+        ok = f_new <= f0 + c1 * alpha * slope
+        next_alpha = jnp.where(ok, alpha, alpha * shrink)
+        return next_alpha, f_new, it + 1, ok
+
+    alpha, f_new, n, ok = jax.lax.while_loop(
+        cond, body, (jnp.float32(alpha0), f0, jnp.int32(0), jnp.bool_(False)))
+    alpha = jnp.where(ok, alpha, 0.0)
+    f_new = jnp.where(ok, f_new, f0)
+    return alpha, f_new, n
+
+
+def quadratic_exact_step(objective: Objective, params, data, direction, g):
+    """Exact line search assuming the objective restricted to the ray is
+    (approximately) quadratic: alpha* = -gᵀd / dᵀHd via one Hessian-vector
+    product.  Used by nonlinear-CG on the (piecewise-quadratic) squared-hinge
+    objective, matching the paper's "exact line-search" CG.
+    """
+    hvp = hessian_vector_product(objective, params, data, direction)
+    dHd = tree_dot(direction, hvp)
+    gd = tree_dot(g, direction)
+    alpha = jnp.where(dHd > 1e-12, -gd / jnp.maximum(dHd, 1e-12), 0.0)
+    return jnp.clip(alpha, 0.0, 1e3)
+
+
+def hessian_vector_product(objective: Objective, params, data, v):
+    """Forward-over-reverse HVP."""
+    g_fn = lambda p: jax.grad(objective)(p, data)
+    _, hv = jax.jvp(g_fn, (params,), (v,))
+    return hv
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchOptimizer:
+    """Base class; concrete optimizers are frozen dataclasses of hyperparams."""
+    name: str = "base"
+
+    def init(self, params):
+        raise NotImplementedError
+
+    def step(self, params, state, objective: Objective, data):
+        raise NotImplementedError
+
+    def reset_memory(self, state):
+        return state
+
+    # convenience: a jitted multi-step driver (objective is static)
+    def run(self, params, state, objective: Objective, data, num_steps: int):
+        def body(carry, _):
+            p, s = carry
+            p, s, aux = self.step(p, s, objective, data)
+            return (p, s), aux["f"]
+        (params, state), fs = jax.lax.scan(body, (params, state), None,
+                                           length=num_steps)
+        return params, state, fs

@@ -1,0 +1,34 @@
+"""Batch gradient descent with Armijo backtracking (a *linear optimizer*:
+linear convergence on strongly-convex objectives, O(window) per step)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .api import BatchOptimizer, Objective, armijo_line_search, tree_axpy, tree_scale
+
+
+class GDState(dict):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientDescent(BatchOptimizer):
+    name: str = "gd"
+    alpha0: float = 1.0
+    max_ls_steps: int = 30
+
+    def init(self, params):
+        return {"alpha_prev": jnp.float32(self.alpha0)}
+
+    def step(self, params, state, objective: Objective, data):
+        f0, g = jax.value_and_grad(objective)(params, data)
+        direction = tree_scale(g, -1.0)
+        # warm-start the search at 2x the last accepted step
+        alpha, f_new, _ = armijo_line_search(
+            objective, params, data, direction, g, f0=f0,
+            alpha0=1.0, max_steps=self.max_ls_steps)
+        new_params = tree_axpy(alpha, direction, params)
+        return new_params, {"alpha_prev": alpha}, {"f": f_new, "alpha": alpha}

@@ -1,0 +1,115 @@
+"""L-BFGS with two-loop recursion — the paper's inner optimizer for the
+parallel PETSc experiments (§5.2).
+
+History is stored as fixed-size (m, dim) ring buffers over the raveled
+parameter vector so the whole optimizer is jit/scan friendly.  History is
+dropped on ``reset_memory`` (batch expansion invalidates curvature pairs
+gathered on the old objective).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .api import BatchOptimizer, Objective, armijo_line_search, tree_axpy, tree_scale
+
+
+@dataclasses.dataclass(frozen=True)
+class LBFGS(BatchOptimizer):
+    name: str = "lbfgs"
+    history: int = 10
+    max_ls_steps: int = 30
+
+    def init(self, params):
+        flat, _ = ravel_pytree(params)
+        m, d = self.history, flat.shape[0]
+        return {
+            "s": jnp.zeros((m, d), jnp.float32),
+            "y": jnp.zeros((m, d), jnp.float32),
+            "rho": jnp.zeros((m,), jnp.float32),
+            "count": jnp.int32(0),           # pairs stored so far (saturates at m)
+            "prev_flat": flat.astype(jnp.float32),
+            "prev_grad": jnp.zeros_like(flat, dtype=jnp.float32),
+            "have_prev": jnp.bool_(False),
+        }
+
+    def reset_memory(self, state):
+        return {**state,
+                "s": jnp.zeros_like(state["s"]),
+                "y": jnp.zeros_like(state["y"]),
+                "rho": jnp.zeros_like(state["rho"]),
+                "count": jnp.int32(0),
+                "have_prev": jnp.bool_(False)}
+
+    def _two_loop(self, state, g_flat):
+        m = self.history
+        s, y, rho, count = state["s"], state["y"], state["rho"], state["count"]
+        # ring buffer: most recent pair lives at index (count-1) % m
+        q = g_flat
+
+        def bwd(i, carry):
+            q, alphas = carry
+            # iterate from newest to oldest valid pair
+            j = jnp.mod(count - 1 - i, m)
+            valid = i < jnp.minimum(count, m)
+            a = jnp.where(valid, rho[j] * jnp.dot(s[j], q), 0.0)
+            q = q - a * y[j] * valid
+            alphas = alphas.at[i].set(a)
+            return q, alphas
+
+        q, alphas = jax.lax.fori_loop(0, m, bwd, (q, jnp.zeros((m,), jnp.float32)))
+        # initial Hessian scaling gamma = s·y / y·y of newest pair
+        jn = jnp.mod(count - 1, m)
+        yy = jnp.dot(y[jn], y[jn])
+        gamma = jnp.where((count > 0) & (yy > 1e-30),
+                          jnp.dot(s[jn], y[jn]) / jnp.maximum(yy, 1e-30), 1.0)
+        r = gamma * q
+
+        def fwd(i, r):
+            k = m - 1 - i  # reverse order of bwd
+            j = jnp.mod(count - 1 - k, m)
+            valid = k < jnp.minimum(count, m)
+            b = jnp.where(valid, rho[j] * jnp.dot(y[j], r), 0.0)
+            return r + (alphas[k] - b) * s[j] * valid
+
+        r = jax.lax.fori_loop(0, m, fwd, r)
+        return r
+
+    def step(self, params, state, objective: Objective, data):
+        flat, unravel = ravel_pytree(params)
+        flat = flat.astype(jnp.float32)
+        f0, g = jax.value_and_grad(objective)(params, data)
+        g_flat, _ = ravel_pytree(g)
+        g_flat = g_flat.astype(jnp.float32)
+
+        # update history with the pair from the previous step
+        s_vec = flat - state["prev_flat"]
+        y_vec = g_flat - state["prev_grad"]
+        sy = jnp.dot(s_vec, y_vec)
+        write = state["have_prev"] & (sy > 1e-12)
+        idx = jnp.mod(state["count"], self.history)
+        s_buf = jnp.where(write, state["s"].at[idx].set(s_vec), state["s"])
+        y_buf = jnp.where(write, state["y"].at[idx].set(y_vec), state["y"])
+        rho_buf = jnp.where(write, state["rho"].at[idx].set(1.0 / jnp.maximum(sy, 1e-30)),
+                            state["rho"])
+        count = jnp.where(write, state["count"] + 1, state["count"])
+        st = {**state, "s": s_buf, "y": y_buf, "rho": rho_buf, "count": count}
+
+        d_flat = -self._two_loop(st, g_flat)
+        # descent safeguard
+        descent = jnp.dot(d_flat, g_flat) < 0
+        d_flat = jnp.where(descent, d_flat, -g_flat)
+        direction = unravel(d_flat)
+
+        alpha, f_new, _ = armijo_line_search(
+            objective, params, data, direction, g, f0=f0,
+            alpha0=1.0, max_steps=self.max_ls_steps)
+        new_params = tree_axpy(alpha, direction, params)
+        # store the point at which g was evaluated, so next step's pair is
+        # (x_{k+1}-x_k, g_{k+1}-g_k)
+        new_state = {**st, "prev_flat": flat, "prev_grad": g_flat,
+                     "have_prev": jnp.bool_(True)}
+        return new_params, new_state, {"f": f_new, "alpha": alpha}

@@ -1,0 +1,82 @@
+"""Sub-sampled Newton-CG (Byrd et al. 2011) — the paper's main inner
+optimizer (§5).
+
+Per step: full-window gradient; Hessian restricted to a fraction R of the
+window; ``cg_steps`` (= R^{-1} = 10 in the paper) linear-CG iterations on
+H d = -g via Hessian-vector products; Armijo step along d.
+
+The Hessian subsample is the *prefix* of the window rather than an i.i.d.
+resample — this preserves BET's no-resampling property (DESIGN.md §9); the
+paper reports robustness to the subsample choice (App. A.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .api import (BatchOptimizer, Objective, armijo_line_search,
+                  hessian_vector_product, tree_axpy, tree_dot, tree_scale,
+                  tree_zeros_like)
+
+
+@dataclasses.dataclass(frozen=True)
+class NewtonCG(BatchOptimizer):
+    name: str = "newton_cg"
+    hessian_fraction: float = 0.1   # R
+    cg_steps: int = 10              # R^{-1}
+    max_ls_steps: int = 30
+
+    def init(self, params):
+        return {"t": jnp.int32(0)}
+
+    def _subsample(self, data, t):
+        """Rolling contiguous sub-window: decorrelates Hessian error across
+        iterations without any re-loading (the window is already in memory;
+        BET's no-resampling property concerns *data access*, not in-memory
+        slicing)."""
+        def take(x):
+            n = x.shape[0]
+            k = max(1, int(round(self.hessian_fraction * n)))
+            n_off = max(1, n - k + 1)
+            off = jnp.mod(t * jnp.int32(max(1, k)), n_off)
+            return jax.lax.dynamic_slice_in_dim(x, off, k, axis=0)
+        return jax.tree_util.tree_map(take, data)
+
+    def step(self, params, state, objective: Objective, data):
+        f0, g = jax.value_and_grad(objective)(params, data)
+        sub = self._subsample(data, state["t"])
+
+        def hvp(v):
+            return hessian_vector_product(objective, params, sub, v)
+
+        # linear CG on H d = -g, d0 = 0
+        r0 = g                      # residual = H d - (-g) = g at d=0
+        d = tree_zeros_like(params)
+        p = tree_scale(g, -1.0)
+        rs = tree_dot(r0, r0)
+
+        def body(i, carry):
+            d, r, p, rs = carry
+            hp = hvp(p)
+            php = tree_dot(p, hp)
+            alpha = jnp.where(php > 1e-30, rs / jnp.maximum(php, 1e-30), 0.0)
+            d = tree_axpy(alpha, p, d)
+            r = tree_axpy(alpha, hp, r)
+            rs_new = tree_dot(r, r)
+            beta = jnp.where(rs > 1e-30, rs_new / jnp.maximum(rs, 1e-30), 0.0)
+            p = tree_axpy(beta, p, tree_scale(r, -1.0))
+            return d, r, p, rs_new
+
+        d, _, _, _ = jax.lax.fori_loop(0, self.cg_steps, body, (d, r0, p, rs))
+
+        # descent safeguard
+        descent = tree_dot(d, g) < 0
+        direction = jax.tree_util.tree_map(
+            lambda di, gi: jnp.where(descent, di, -gi), d, g)
+        alpha, f_new, _ = armijo_line_search(
+            objective, params, data, direction, g, f0=f0,
+            alpha0=1.0, max_steps=self.max_ls_steps)
+        new_params = tree_axpy(alpha, direction, params)
+        return new_params, {"t": state["t"] + 1}, {"f": f_new, "alpha": alpha}

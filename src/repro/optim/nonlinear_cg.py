@@ -1,0 +1,64 @@
+"""Nonlinear Conjugate Gradient (Fletcher–Reeves 1964) with near-exact line
+search — the paper's first inner optimizer (App. A.1).
+
+The CG memory (previous gradient norm and direction) becomes invalid when the
+objective changes from f̂_t to f̂_{t+1}; ``reset_memory`` restarts the method,
+exactly as the paper does at every batch expansion.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .api import (BatchOptimizer, Objective, armijo_line_search,
+                  quadratic_exact_step, tree_axpy, tree_dot, tree_scale,
+                  tree_zeros_like)
+
+
+@dataclasses.dataclass(frozen=True)
+class NonlinearCG(BatchOptimizer):
+    name: str = "cg"
+    exact_line_search: bool = True  # exact on (piecewise-)quadratic losses
+    max_ls_steps: int = 30
+
+    def init(self, params):
+        return {
+            "prev_dir": tree_zeros_like(params),
+            "prev_gg": jnp.float32(0.0),   # ||g_{k-1}||^2 ; 0 => restart
+        }
+
+    def reset_memory(self, state):
+        return {**state, "prev_gg": jnp.float32(0.0),
+                "prev_dir": tree_zeros_like(state["prev_dir"])}
+
+    def step(self, params, state, objective: Objective, data):
+        f0, g = jax.value_and_grad(objective)(params, data)
+        gg = tree_dot(g, g)
+        # Fletcher–Reeves beta; restart (beta=0) right after reset
+        beta = jnp.where(state["prev_gg"] > 0, gg / jnp.maximum(state["prev_gg"], 1e-30), 0.0)
+        direction = tree_axpy(beta, state["prev_dir"], tree_scale(g, -1.0))
+        # safeguard: if not a descent direction, restart with steepest descent
+        descent = tree_dot(g, direction) < 0
+        direction = jax.tree_util.tree_map(
+            lambda d, gneg: jnp.where(descent, d, gneg), direction, tree_scale(g, -1.0))
+        if self.exact_line_search:
+            alpha = quadratic_exact_step(objective, params, data, direction, g)
+            new_params = tree_axpy(alpha, direction, params)
+            f_new = objective(new_params, data)
+            # fall back to Armijo if the quadratic model overstepped
+            bad = f_new > f0
+            alpha_b, f_b, _ = armijo_line_search(
+                objective, params, data, direction, g, f0=f0,
+                alpha0=1.0, max_steps=self.max_ls_steps)
+            alpha = jnp.where(bad, alpha_b, alpha)
+            f_new = jnp.where(bad, f_b, f_new)
+            new_params = tree_axpy(alpha, direction, params)
+        else:
+            alpha, f_new, _ = armijo_line_search(
+                objective, params, data, direction, g, f0=f0,
+                alpha0=1.0, max_steps=self.max_ls_steps)
+            new_params = tree_axpy(alpha, direction, params)
+        new_state = {"prev_dir": direction, "prev_gg": gg}
+        return new_params, new_state, {"f": f_new, "alpha": alpha, "beta": beta}

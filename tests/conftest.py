@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the single real CPU device — the 512-device override is
+# strictly a dryrun.py concern (see system design notes).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

@@ -1,0 +1,101 @@
+"""BET schedules (Alg. 1/2/3), baselines and the §4.2 time model."""
+import math
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BETSchedule, SimulatedClock, run_batch, run_bet_fixed,
+                        run_dsm, run_minibatch, run_two_track, theory)
+from repro.data.synthetic import load
+from repro.models.linear import init_params, make_objective, solve_reference
+from repro.optim import Adagrad, NewtonCG
+
+DS = load("w8a_like", scale=0.25)           # n = 2048
+OBJ = make_objective("squared_hinge", lam=1e-3)
+DATA = (DS.X, DS.y)
+W0 = init_params(DS.d)
+OPT = NewtonCG()
+
+
+def test_schedule_windows_double_until_N():
+    ws = BETSchedule(n0=100, growth=2.0).windows(1500)
+    assert ws[0] == 100
+    for a, b in zip(ws, ws[1:]):
+        assert b <= 1500 and b >= min(1500, 2 * a - 1)
+    assert ws[-1] == 1500
+
+
+def test_clock_concurrent_loading():
+    c = SimulatedClock(p=10, a=1, s=5, preloaded=100)
+    c.batch_update(100)                     # resident: no wait
+    assert c.time == pytest.approx(5 + 10)
+    c.batch_update(1000)                    # must wait until 900 more loaded
+    assert c.time == pytest.approx(900 + 5 + 100)
+    assert c.data_accesses == 1100
+
+
+def test_clock_stochastic_pays_load_rate():
+    c = SimulatedClock(p=10, a=1, s=5)
+    c.stochastic_update(64)
+    assert c.time == pytest.approx(5 + 64 * (1 + 0.1))
+
+
+def test_bet_data_access_advantage():
+    """Thm 4.1: BET accesses O(N) data vs Batch's O(N log(1/eps))."""
+    clock_b, clock_e = SimulatedClock(), SimulatedClock()
+    tr_b = run_batch(DS, OPT, OBJ, steps=24, clock=clock_b, w0=W0)
+    tr_e = run_bet_fixed(DS, OPT, OBJ, schedule=BETSchedule(n0=128),
+                         inner_steps=4, final_steps=8, clock=clock_e, w0=W0)
+    # similar final quality
+    assert abs(tr_e.final().f_full - tr_b.final().f_full) < 0.05
+    # far fewer data accesses
+    assert clock_e.data_accesses < 0.6 * clock_b.data_accesses
+
+
+def test_bet_faster_at_equal_budget():
+    """Fig. 2's qualitative claim: at early/mid simulated-time budgets BET
+    has lower objective than Batch."""
+    tr_b = run_batch(DS, OPT, OBJ, steps=20, clock=SimulatedClock(), w0=W0)
+    tr_e = run_bet_fixed(DS, OPT, OBJ, schedule=BETSchedule(n0=128),
+                         inner_steps=4, final_steps=10,
+                         clock=SimulatedClock(), w0=W0)
+
+    def value_at(tr, budget):
+        pts = [p for p in tr.points if p.time <= budget]
+        return pts[-1].f_full if pts else float("inf")
+
+    budget = tr_b.points[2].time            # time of batch's 3rd step
+    assert value_at(tr_e, budget) < value_at(tr_b, budget)
+
+
+def test_two_track_expands_and_converges():
+    tr = run_two_track(DS, OPT, OBJ, schedule=BETSchedule(n0=128),
+                       final_steps=8, clock=SimulatedClock(), w0=W0)
+    stages = {p.stage for p in tr.points}
+    assert len(stages) >= 3                 # several expansions happened
+    assert tr.final().f_window < 0.6 * tr.points[0].f_window
+
+
+def test_dsm_runs_and_grows_sample():
+    tr = run_dsm(DS, OPT, OBJ, theta=0.5, n0=64, steps=25,
+                 clock=SimulatedClock(), w0=W0)
+    assert tr.points[-1].window > 64        # variance test triggered growth
+    assert tr.final().f_full < tr.points[0].f_full
+
+
+def test_minibatch_adagrad_runs():
+    tr = run_minibatch(DS, Adagrad(lr=0.5), OBJ, batch_size=64, steps=200,
+                       clock=SimulatedClock(), w0=W0)
+    assert tr.final().f_full < 0.9 * float(OBJ(W0, DATA))
+
+
+def test_theory_formulas():
+    assert theory.kappa_hat(1.0) == math.ceil(math.log(6))
+    T = theory.num_stages(1.0, 1e-3)
+    assert 3 * (1.0 / 2 ** T) <= 1e-3 < 3 * (1.0 / 2 ** (T - 1))
+    # BET total accesses ~ 2 kappa N vs batch kappa N T
+    kh = theory.kappa_hat(2.0)
+    bet = theory.bet_data_accesses(1, kh, T)
+    bat = theory.batch_data_accesses(2 ** T, kh, T)
+    assert bet < bat
+    assert bet <= 2 * kh * 2 ** (T + 1)

@@ -1,0 +1,95 @@
+"""Inner optimizers: linear convergence, memory semantics, line search."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synthetic import load, make_classification
+from repro.models.linear import make_objective, init_params, solve_reference
+from repro.optim import (Adagrad, AdamW, GradientDescent, LBFGS, NewtonCG,
+                         NonlinearCG, make_optimizer)
+
+DS = load("w8a_like", scale=0.25)
+OBJ = make_objective("squared_hinge", lam=1e-3)
+DATA = (DS.X, DS.y)
+W0 = init_params(DS.d)
+
+
+@pytest.fixture(scope="module")
+def f_star():
+    _, fs = solve_reference(OBJ, W0, DATA, steps=60)
+    return float(fs)
+
+
+@pytest.mark.parametrize("opt", [GradientDescent(), NonlinearCG(), LBFGS(),
+                                 NewtonCG()])
+def test_monotone_decrease(opt):
+    w, state = W0, opt.init(W0)
+    prev = float(OBJ(w, DATA))
+    for _ in range(10):
+        w, state, aux = opt.step(w, state, OBJ, DATA)
+        cur = float(aux["f"])
+        assert cur <= prev + 1e-6
+        prev = cur
+
+
+@pytest.mark.parametrize("opt", [NonlinearCG(), LBFGS(), NewtonCG()])
+def test_linear_convergence_beats_gd(opt, f_star):
+    """Second-order-ish methods reach lower loss than GD in equal steps —
+    the ordering the paper's App. A.1 relies on."""
+    def run(o, n):
+        w, s = W0, o.init(W0)
+        w, s, fs = o.run(w, s, OBJ, DATA, n)
+        return float(fs[-1])
+
+    assert run(opt, 20) <= run(GradientDescent(), 20) + 1e-6
+
+
+def test_newton_cg_near_quadratic_convergence(f_star):
+    # hessian_fraction=0.5: at this reduced scale (n=2048, d=300) the paper's
+    # R=0.1 subsample is rank-deficient; the paper's datasets have n >> d.
+    opt = NewtonCG(hessian_fraction=0.5)
+    w, s = W0, opt.init(W0)
+    w, s, fs = opt.run(w, s, OBJ, DATA, 25)
+    rel = (float(fs[-1]) - f_star) / abs(f_star)
+    assert rel < 1e-3, rel
+
+
+def test_reset_memory_invalidates_history():
+    opt = LBFGS(history=4)
+    w, s = W0, opt.init(W0)
+    for _ in range(6):
+        w, s, _ = opt.step(w, s, OBJ, DATA)
+    assert int(s["count"]) > 0
+    s2 = opt.reset_memory(s)
+    assert int(s2["count"]) == 0
+    assert not bool(s2["have_prev"])
+    assert float(jnp.sum(jnp.abs(s2["s"]))) == 0.0
+
+
+def test_cg_restart_beta_zero():
+    opt = NonlinearCG()
+    w, s = W0, opt.init(W0)
+    w, s, aux = opt.step(w, s, OBJ, DATA)
+    assert float(aux["beta"]) == 0.0            # first step = steepest descent
+    w, s, aux = opt.step(w, s, OBJ, DATA)
+    assert float(aux["beta"]) > 0.0
+    s = opt.reset_memory(s)
+    w, s, aux = opt.step(w, s, OBJ, DATA)
+    assert float(aux["beta"]) == 0.0            # restart after expansion
+
+
+def test_stochastic_optimizers_decrease_loss():
+    ds = make_classification("tiny", 512, 32, seed=3)
+    obj = make_objective("logistic", lam=1e-3)
+    data = (ds.X, ds.y)
+    for opt in (Adagrad(lr=0.5), AdamW(lr=1e-2)):
+        w, s = jnp.zeros((32,)), opt.init(jnp.zeros((32,)))
+        f0 = float(obj(w, data))
+        for _ in range(50):
+            w, s, _ = opt.step(w, s, obj, data)
+        assert float(obj(w, data)) < f0 * 0.9
+
+
+def test_registry():
+    for name in ("gd", "cg", "lbfgs", "newton_cg", "adagrad", "adamw"):
+        assert make_optimizer(name).name == name

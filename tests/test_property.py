@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BETSchedule, SimulatedClock, theory
+from repro.data.window import ExpandingWindow, synth_corpus
+from repro.models.layers import apply_rope
+from repro.models.moe import _capacity, route
+from repro.models.common import ModelConfig
+
+
+# ------------------------------------------------------------- schedules
+@given(n0=st.integers(2, 10_000), N=st.integers(2, 1_000_000),
+       growth=st.floats(1.5, 4.0))
+@settings(max_examples=200, deadline=None)
+def test_schedule_invariants(n0, N, growth):
+    ws = BETSchedule(n0=n0, growth=growth).windows(N)
+    assert ws[-1] == N
+    assert all(a < b or (a == b == N) for a, b in zip(ws, ws[1:]))
+    assert len(ws) <= int(math.log(max(N / min(n0, N), 1), growth)) + 3
+    # exponential growth => total data touched with k iters/stage is O(N)
+    if growth == 2.0:
+        assert sum(ws) <= 4 * N + 2 * n0
+
+
+@given(n0=st.integers(1, 1000), steps=st.lists(st.integers(1, 5000),
+                                               min_size=1, max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_clock_monotone(n0, steps):
+    c = SimulatedClock(p=10, a=1, s=5, preloaded=n0)
+    prev_t = 0.0
+    for n in steps:
+        c.batch_update(n)
+        assert c.time >= prev_t
+        assert c.points_loaded <= max(max(steps), n0)
+        prev_t = c.time
+    assert c.data_accesses == sum(steps)
+
+
+@given(eps=st.floats(1e-8, 0.3))
+@settings(max_examples=50, deadline=None)
+def test_stage_count_logarithmic(eps):
+    T = theory.num_stages(1.0, eps)
+    assert 2 ** T >= 1.0 / eps              # enough halvings
+    assert T <= math.log2(3.0 / eps) + 1
+
+
+# --------------------------------------------------------- expanding window
+@given(n0=st.integers(1, 50), n=st.integers(51, 400))
+@settings(max_examples=50, deadline=None)
+def test_window_prefix_reuse(n0, n):
+    """BET's core resource property: windows are nested prefixes of one
+    permutation — data loaded once is never invalidated."""
+    corpus = synth_corpus(n, 8, 97, seed=1)
+    w = ExpandingWindow(corpus, n0)
+    prev = w.window().copy()
+    while not w.full:
+        w.grow()
+        cur = w.window()
+        assert len(cur) >= len(prev)
+        np.testing.assert_array_equal(cur[: len(prev)], prev)  # strict prefix
+        prev = cur.copy()
+
+
+@given(bs=st.integers(1, 16), step=st.integers(0, 100))
+@settings(max_examples=50, deadline=None)
+def test_window_sampling_stays_resident(bs, step):
+    corpus = synth_corpus(64, 8, 97, seed=2)
+    w = ExpandingWindow(corpus, 16)
+    batch = w.sample_batch(bs, step)
+    # every sampled row exists inside the resident window
+    win = w.window()
+    for row in batch:
+        assert any((row == r).all() for r in win)
+
+
+# ------------------------------------------------------------------- MoE
+@given(S_g=st.integers(8, 256), E=st.sampled_from([4, 8, 16]),
+       K=st.integers(1, 4), cap=st.floats(1.0, 2.0))
+@settings(max_examples=30, deadline=None)
+def test_moe_capacity_and_combine_bounds(S_g, E, K, cap):
+    K = min(K, E)
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=32,
+                      num_experts=E, experts_per_token=K, moe_d_ff=16,
+                      capacity_factor=cap, moe_group_size=S_g)
+    key = jax.random.key(S_g * 31 + E)
+    x = jax.random.normal(key, (2, S_g, 32))
+    rw = jax.random.normal(jax.random.key(7), (32, E))
+    combine, dispatch, aux = route(cfg, rw, x)
+    C = _capacity(cfg, S_g)
+    assert combine.shape == (2, S_g, E, C)
+    # each (expert, capacity) slot holds at most one token
+    per_slot = jnp.sum((combine > 0), axis=1)          # (G, E, C)
+    assert int(per_slot.max()) <= 1
+    # combine weights are within (0, 1] and per-token sum <= 1 + eps
+    tok_sum = jnp.sum(combine, axis=(2, 3))
+    assert float(tok_sum.max()) <= 1.0 + 1e-5
+    assert float(aux["load_balance"]) >= 1.0 - 1e-3    # E·Σ f·p >= 1 at optimum
+
+
+# ------------------------------------------------------------------- RoPE
+@given(S=st.integers(2, 64), hd=st.sampled_from([16, 32, 64]))
+@settings(max_examples=30, deadline=None)
+def test_rope_preserves_norm_and_relativity(S, hd):
+    key = jax.random.key(S * hd)
+    x = jax.random.normal(key, (1, S, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    out = apply_rope(x, pos, 1e4)
+    # rotation: per-pair norms preserved
+    assert jnp.allclose(jnp.linalg.norm(out, axis=-1),
+                        jnp.linalg.norm(x, axis=-1), rtol=1e-4, atol=1e-4)
+    # relativity: q·k depends only on distance
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, hd))
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), 1e4)
+        kr = apply_rope(k, jnp.array([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert dot_at(5, 3) == pytest.approx(dot_at(25, 23), rel=1e-3, abs=1e-3)

@@ -1,0 +1,118 @@
+"""Sharding rules: divisibility, spec coverage, batch/cache partitioning.
+
+These run on a *virtual* (not device-backed) mesh description by checking
+PartitionSpecs algebraically — the real 512-device lowering is exercised by
+launch/dryrun.py (see benchmarks/artifacts)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs
+from repro.launch.shardings import (batch_partition, cache_partition,
+                                    param_specs_tree)
+from repro.models import transformer as T
+
+
+class FakeMesh:
+    """Mesh stand-in with the production axis sizes (no devices needed)."""
+    def __init__(self, multi_pod=False):
+        self.shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                      else {"data": 16, "model": 16})
+        self.axis_names = tuple(self.shape)
+
+
+def axis_size(mesh, axes):
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+@pytest.mark.parametrize("policy", ["tp", "fsdp_tp"])
+def test_param_specs_divide_evenly(arch, multi_pod, policy):
+    cfg = configs.get(arch)
+    pshape = T.param_specs(cfg)
+    mesh = FakeMesh(multi_pod)
+    spec_tree = param_specs_tree(cfg, pshape, mesh, policy)
+
+    def check(path, leaf, spec):
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            assert leaf.shape[dim] % axis_size(mesh, axes) == 0, \
+                (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), pshape, spec_tree)
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "llama4_scout_17b_a16e",
+                                  "falcon_mamba_7b"])
+def test_fsdp_actually_shards_big_params(arch):
+    """Training policy must shard every large matrix on >= 1 axis (a 9B+
+    model with replicated weights cannot fit 16 GB HBM)."""
+    cfg = configs.get(arch)
+    pshape = T.param_specs(cfg)
+    mesh = FakeMesh()
+    spec_tree = param_specs_tree(cfg, pshape, mesh, "fsdp_tp")
+
+    def check(path, leaf, spec):
+        n = int(np.prod(leaf.shape))
+        if n >= (1 << 24):                  # >= 16M elements
+            assert any(a is not None for a in spec), (path, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(check, pshape, spec_tree)
+
+
+def test_moe_experts_shard_over_model():
+    cfg = configs.get("llama4_scout_17b_a16e")
+    pshape = T.param_specs(cfg)
+    spec_tree = param_specs_tree(cfg, pshape, FakeMesh(), "fsdp_tp")
+    moe = spec_tree["stack_moe"]
+    assert moe["w_gate"][1] == "model"       # (L, E, d, f): experts on model
+    assert moe["w_down"][1] == "model"
+
+
+@pytest.mark.parametrize("shape", list(specs.INPUT_SHAPES))
+def test_batch_specs_shardable(shape):
+    cfg = configs.get("yi-9b")
+    if specs.INPUT_SHAPES[shape][2] == "decode":
+        cfg = specs.serve_config(cfg, shape)
+    batch = specs.batch_specs(cfg, shape)
+    mesh = FakeMesh()
+    tree = batch_partition(cfg, batch, mesh)
+
+    def check(path, leaf, spec):
+        for dim, axes in enumerate(spec):
+            if axes is not None:
+                assert leaf.shape[dim] % axis_size(mesh, axes) == 0
+
+    jax.tree_util.tree_map_with_path(check, batch, tree)
+
+
+def test_cache_specs_shard_sequence_over_model():
+    cfg = specs.serve_config(configs.get("yi-9b"), "decode_32k")
+    cache = specs.cache_specs(cfg, "decode_32k")
+    tree = cache_partition(cfg, cache, FakeMesh())
+    kspec = tree["stack_attn_mlp"]["k"]
+    assert kspec[1] == ("data",) or kspec[1] == "data" \
+        or kspec[1] == ("pod", "data") or kspec[1] is not None
+    assert kspec[2] == "model"               # cache sequence axis
+
+def test_long_500k_serve_configs_bounded():
+    """No architecture materializes an O(500k) decode cache: dense archs get
+    the sliding-window variant, SSM/hybrid state is O(1)/O(window)."""
+    for arch in configs.ARCH_IDS:
+        cfg = specs.serve_config(configs.get(arch), "long_500k")
+        cache = specs.cache_specs(cfg, "long_500k")
+        leaves = jax.tree_util.tree_leaves(cache)
+        per_seq_bytes = sum(
+            np.prod(l.shape) * l.dtype.itemsize for l in leaves)
+        # <= ~2.5 GB of cache for batch 1 (vs ~100s of GB unwindowed)
+        assert per_seq_bytes < 2.5e9, (arch, per_seq_bytes)

@@ -1,0 +1,108 @@
+"""End-to-end behaviour: the paper's claims reproduced on synthetic data,
+and the LM-framework integration (BET as a data schedule around a pjit
+train step)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import (BETSchedule, SimulatedClock, run_batch,
+                        run_bet_fixed, run_two_track)
+from repro.data.synthetic import load
+from repro.launch.train import TrainConfig, train_lm
+from repro.models.linear import (accuracy, init_params, make_objective,
+                                 rfvd, solve_reference)
+from repro.optim import NewtonCG
+
+# R=0.5: at this reduced scale (n=2048, d=300) the paper's R=0.1 subsample
+# is rank-deficient; the paper's datasets have n >> d.
+OPT = NewtonCG(hessian_fraction=0.5)
+
+
+@pytest.fixture(scope="module")
+def convex_setup():
+    ds = load("w8a_like", scale=0.25)
+    obj = make_objective("squared_hinge", lam=1e-3)
+    w0 = init_params(ds.d)
+    w_star, f_star = solve_reference(obj, w0, (ds.X, ds.y), steps=60)
+    return ds, obj, w0, float(f_star)
+
+
+def test_bet_end_to_end_reaches_tolerance(convex_setup):
+    ds, obj, w0, f_star = convex_setup
+    tr = run_bet_fixed(ds, OPT, obj, schedule=BETSchedule(n0=128),
+                       inner_steps=5, final_steps=20,
+                       clock=SimulatedClock(), w0=w0)
+    final_rfvd = float(rfvd(obj, tr.params, (ds.X, ds.y), f_star))
+    assert final_rfvd < -3.0                    # within 0.1% of optimum
+    acc = float(accuracy(tr.params, ds.X_test, ds.y_test))
+    assert acc > 0.8
+
+
+def test_two_track_parameter_free_competitive(convex_setup):
+    """Alg. 2 with NO tuning is within a small factor of the tuned Alg. 1
+    run in data accesses while reaching the same quality band."""
+    ds, obj, w0, f_star = convex_setup
+    c1, c2 = SimulatedClock(), SimulatedClock()
+    tr_fixed = run_bet_fixed(ds, OPT, obj,
+                             schedule=BETSchedule(n0=128), inner_steps=5,
+                             final_steps=12, clock=c1, w0=w0)
+    tr_tt = run_two_track(ds, OPT, obj, schedule=BETSchedule(n0=128),
+                          final_steps=12, clock=c2, w0=w0)
+    r_fixed = float(rfvd(obj, tr_fixed.params, (ds.X, ds.y), f_star))
+    r_tt = float(rfvd(obj, tr_tt.params, (ds.X, ds.y), f_star))
+    assert r_tt < -2.5
+    assert c2.data_accesses < 4 * c1.data_accesses
+
+
+def test_bet_vs_batch_wallclock_ordering(convex_setup):
+    """Fig. 3: for loose tolerances Batch pays a large entry cost (full
+    load + full-size iterations); BET reaches them much earlier."""
+    ds, obj, w0, f_star = convex_setup
+    tr_b = run_batch(ds, OPT, obj, steps=25, clock=SimulatedClock(),
+                     w0=w0)
+    tr_e = run_bet_fixed(ds, OPT, obj, schedule=BETSchedule(n0=128),
+                         inner_steps=5, final_steps=15,
+                         clock=SimulatedClock(), w0=w0)
+
+    def time_to(tr, target):
+        for p in tr.points:
+            if (p.f_full - f_star) / abs(f_star) < target:
+                return p.time
+        return float("inf")
+
+    for tol in (0.3, 0.1):
+        assert time_to(tr_e, tol) < time_to(tr_b, tol)
+
+
+# ----------------------------------------------------------- LM integration
+def test_lm_bet_training_loss_decreases():
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    tc = TrainConfig(schedule="bet", inner_steps=3, final_steps=5,
+                     batch_size=4, seq_len=64, n0=32, corpus_size=128)
+    tr = train_lm(cfg, tc)
+    first = np.mean([p.f_full for p in tr.points[:2]])
+    last = np.mean([p.f_full for p in tr.points[-2:]])
+    assert last < first - 0.05
+    # window expanded to the full corpus
+    assert tr.points[-1].window == 128
+
+
+def test_lm_bet_beats_batch_at_equal_simulated_time():
+    """The systems claim transferred to the LM path: with slow loading
+    (a = 2), BET's early small-window steps win at early time budgets."""
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    common = dict(batch_size=4, seq_len=64, n0=32, corpus_size=512,
+                  inner_steps=3, final_steps=6)
+    clock_kw = dict(p=10.0, a=2.0, s=5.0)
+    tr_bet = train_lm(cfg, TrainConfig(schedule="bet", **common),
+                      clock=SimulatedClock(preloaded=32, **clock_kw))
+    tr_bat = train_lm(cfg, TrainConfig(schedule="batch", **common),
+                      clock=SimulatedClock(preloaded=32, **clock_kw))
+    # batch cannot step before the full corpus is loaded
+    assert tr_bat.points[0].time >= (512 - 32) * 2 - 1e-6
+    assert tr_bet.points[0].time < 200
+    # at the time batch takes its first step, BET has already improved
+    t0 = tr_bat.points[0].time
+    bet_at_t0 = [p.f_full for p in tr_bet.points if p.time <= t0]
+    assert bet_at_t0 and min(bet_at_t0) < tr_bat.points[0].f_full
