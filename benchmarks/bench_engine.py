@@ -1,0 +1,118 @@
+"""Engine vs legacy-loop micro-benchmark on the Fig. 3 workload.
+
+Runs the paper's three drivers twice on the webspam-scale problem — once
+through the preserved host-side loops (core/legacy.py), once through the
+device-side BetEngine behind the same public wrappers — and reports
+
+  * host-sync counts: every blocking device→host pull in the legacy loops
+    (counted at the ``float(...)`` sites) vs the engine's once-per-stage
+    ``device_get`` flushes (``trace.meta["host_transfers"]``),
+  * wall-clock for a steady-state run (both sides get one warmup run; the
+    legacy loops still re-trace their per-stage lambdas every run, which is
+    part of what they cost),
+  * final-objective parity between the two implementations.
+
+JSON output so future PRs can track the trajectory:
+
+    PYTHONPATH=src:. python -m benchmarks.bench_engine [--scale 0.25] \
+        [--out bench_engine.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import (BETSchedule, SimulatedClock, legacy, run_batch,
+                        run_bet_fixed, run_two_track)
+
+from . import common
+
+DRIVERS = {
+    "bet_fixed": (run_bet_fixed, legacy.run_bet_fixed),
+    "two_track": (run_two_track, legacy.run_two_track),
+    "batch": (run_batch, legacy.run_batch),
+}
+
+
+def _kwargs(method: str, sched: BETSchedule) -> dict:
+    if method == "bet_fixed":
+        return dict(schedule=sched, inner_steps=5, final_steps=25)
+    if method == "two_track":
+        return dict(schedule=sched, final_steps=25)
+    return dict(steps=30)
+
+
+def bench_method(method: str, ds, obj, w0, sched: BETSchedule) -> dict:
+    engine_fn, legacy_fn = DRIVERS[method]
+    kw = _kwargs(method, sched)
+
+    def timed(fn):
+        fn(ds, common.default_newton(ds), obj,
+           clock=SimulatedClock(), w0=w0, **kw)          # warmup / compile
+        t0 = time.perf_counter()
+        tr = fn(ds, common.default_newton(ds), obj,
+                clock=SimulatedClock(), w0=w0, **kw)
+        return tr, time.perf_counter() - t0
+
+    legacy.reset_host_pulls()
+    tr_l, wall_l = timed(legacy_fn)
+    pulls_l = legacy.host_pulls() // 2                   # warmup + timed run
+    tr_e, wall_e = timed(engine_fn)
+    stages = tr_e.meta["stages"]
+    transfers = tr_e.meta["host_transfers"]
+    # syncs per *inner-stage* step: the two-track final phase pulls once per
+    # step, so attribute it separately from the 3-pull racing steps
+    n_inner = sum(1 for p in tr_l.points if "f_fast_on_t" in p.extra) \
+        if method == "two_track" else len(tr_l.points)
+    n_tail = len(tr_l.points) - n_inner
+    inner_rate = (pulls_l - n_tail) / max(1, n_inner)
+    return {
+        "legacy": {"wall_s": round(wall_l, 4), "host_syncs": pulls_l,
+                   "steps": len(tr_l.points),
+                   "syncs_per_step": round(pulls_l / len(tr_l.points), 2),
+                   "syncs_per_inner_step": round(inner_rate, 2),
+                   "final_f": tr_l.final().f_full},
+        "engine": {"wall_s": round(wall_e, 4), "host_syncs": transfers,
+                   "steps": len(tr_e.points), "stages": stages,
+                   "syncs_per_stage": round(transfers / stages, 2),
+                   "final_f": tr_e.final().f_full},
+        "speedup": round(wall_l / wall_e, 2),
+        "sync_reduction": round(pulls_l / max(1, transfers), 1),
+        "parity": abs(tr_e.final().f_full - tr_l.final().f_full)
+                  <= 1e-3 * max(1.0, abs(tr_l.final().f_full)),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="webspam_like")
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--out", default=None)
+    args, _ = ap.parse_known_args()     # tolerate benchmarks.run's selectors
+
+    ds, obj, w0, _ = common.setup(args.dataset, scale=args.scale)
+    sched = BETSchedule(n0=max(128, min(ds.d, ds.n // 8)))
+    report = {"workload": f"fig3/{args.dataset}", "n": ds.n, "d": ds.d,
+              "methods": {}}
+    for method in DRIVERS:
+        report["methods"][method] = bench_method(method, ds, obj, w0, sched)
+    m = report["methods"]
+    report["claims"] = {
+        "engine_max_one_transfer_per_stage": all(
+            v["engine"]["syncs_per_stage"] <= 1.0 for v in m.values()),
+        "legacy_at_least_two_syncs_per_step": all(
+            v["legacy"]["syncs_per_inner_step"] >= 2.0
+            for k, v in m.items() if k != "batch"),
+        "engine_faster": all(v["speedup"] > 1.0 for v in m.values()),
+        "parity": all(v["parity"] for v in m.values()),
+    }
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

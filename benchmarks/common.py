@@ -6,7 +6,8 @@ import time
 import numpy as np
 
 from repro.core import (BETSchedule, SimulatedClock, run_batch, run_bet_fixed,
-                        run_dsm, run_minibatch, run_two_track)
+                        run_dsm, run_gradient_variance, run_minibatch,
+                        run_two_track)
 from repro.data.synthetic import load
 from repro.models.linear import (accuracy, init_params, make_objective,
                                  solve_reference)
@@ -70,6 +71,11 @@ def run_method(method: str, ds, obj, w0, *, clk=None, opt=None,
                              final_steps=final_steps, clock=clk, w0=w0)
     if method == "batch":
         return run_batch(ds, opt, obj, steps=steps, clock=clk, w0=w0)
+    if method == "bet_gradvar":
+        # beyond-paper: the DSM norm test driving BET's expanding window
+        return run_gradient_variance(ds, opt, obj, schedule=sched,
+                                     theta=theta, final_steps=final_steps,
+                                     clock=clk, w0=w0)
     if method == "dsm":
         return run_dsm(ds, opt, obj, theta=theta, n0=n0, steps=steps,
                        clock=clk, w0=w0)

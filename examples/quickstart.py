@@ -1,9 +1,15 @@
 """Quickstart: Batch-Expansion Training on a convex problem — the paper's
 own setting (squared-hinge SVM, Eq. 1), in ~40 lines of public API.
 
+The engine API: one driver (`BetEngine.run`), one `ExpansionPolicy` per
+schedule.  `TwoTrack()` is Algorithm 2 (parameter-free); `NeverExpand` is
+the Batch baseline; swap in `FixedSteps` / `GradientVariance` (or your own
+policy) without touching the loop.
+
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import BETSchedule, SimulatedClock, run_batch, run_two_track
+from repro.core import (BETSchedule, BetEngine, NeverExpand, SimulatedClock,
+                        TwoTrack)
 from repro.data.synthetic import load
 from repro.models.linear import (accuracy, init_params, make_objective,
                                  rfvd, solve_reference)
@@ -22,17 +28,20 @@ opt = NewtonCG(hessian_fraction=0.2)
 # 3. The paper's time model: compute accel p, load rate a, call overhead s.
 make_clock = lambda: SimulatedClock(p=10.0, a=1.0, s=5.0)
 
-# 4. Two-Track BET (Algorithm 2) vs the Batch baseline.
+# 4. One engine, two policies: Two-Track BET (Algorithm 2) vs Batch.
+engine = BetEngine(schedule=BETSchedule(n0=128))
 bet_clock, batch_clock = make_clock(), make_clock()
-tr_bet = run_two_track(ds, opt, objective, schedule=BETSchedule(n0=128),
-                       final_steps=20, clock=bet_clock, w0=w0)
-tr_batch = run_batch(ds, opt, objective, steps=25, clock=batch_clock, w0=w0)
+tr_bet = engine.run(ds, opt, objective, TwoTrack(final_steps=20),
+                    clock=bet_clock, w0=w0)
+tr_batch = engine.run(ds, opt, objective, NeverExpand(steps=25),
+                      clock=batch_clock, w0=w0)
 
 for name, tr, clk in (("BET (two-track)", tr_bet, bet_clock),
                       ("Batch", tr_batch, batch_clock)):
     print(f"{name:16s} sim_time={clk.time:9.0f}  data_accesses={clk.data_accesses:8d}  "
           f"log-RFVD={float(rfvd(objective, tr.params, (ds.X, ds.y), f_star)):6.2f}  "
-          f"test_acc={float(accuracy(tr.params, ds.X_test, ds.y_test)):.4f}")
+          f"test_acc={float(accuracy(tr.params, ds.X_test, ds.y_test)):.4f}  "
+          f"host_transfers={tr.meta['host_transfers']}")
 
 # 5. The headline: objective value when only 25% of the simulated time has passed.
 budget = 0.25 * batch_clock.time

@@ -1,68 +1,36 @@
-"""Batch-Expansion Training — Algorithms 1 and 3 of the paper, plus the
-plain Batch baseline.
+"""Batch-Expansion Training — the paper-named entry points.
 
-These drivers are *host-side* controllers: each stage jit-compiles the inner
-optimizer step for the current window shape (stages are O(log N), so at most
-~log2(N/n0) retraces) and advances a SimulatedClock per the §4.2 cost model.
-The distributed LM variant (pjit over the production mesh) lives in
-launch/train.py and reuses BETSchedule unchanged.
+These are thin, signature-stable wrappers over the unified
+:class:`~repro.core.engine.BetEngine`: each pairing of the paper's
+algorithms with an inner optimizer is one :class:`ExpansionPolicy`
+(``NeverExpand`` = the Batch baseline, ``FixedSteps`` = Alg. 1/3,
+``TwoTrack`` = Alg. 2's parameter-free condition (3)) handed to the single
+device-side driver in core/engine.py.  New pairings — e.g. the
+gradient-variance trigger ``GradientVariance`` — are one small policy
+class, not another copy of the loop.
+
+The pre-engine host-side loops live on in core/legacy.py for parity tests
+and benchmarks/bench_engine.py.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-
 from ..optim.api import BatchOptimizer, Objective
+from .engine import (BETSchedule, BetEngine, FixedSteps, GradientVariance,
+                     NeverExpand, TwoTrack)
 from .timemodel import SimulatedClock
 from .trace import Trace
 
-
-@dataclasses.dataclass(frozen=True)
-class BETSchedule:
-    """Stage schedule: n_{t+1} = growth * n_t (paper: growth=2, §3.5 notes the
-    factor is not critical), ε_{t+1} = ε_t / growth."""
-    n0: int = 200
-    growth: float = 2.0
-
-    def windows(self, N: int) -> list[int]:
-        ns, n = [], self.n0
-        while n < N:
-            ns.append(n)
-            n = min(N, int(math.ceil(n * self.growth)))
-        ns.append(N)
-        return ns
-
-
-def _measure(objective, w, window, full_data):
-    f_win = float(objective(w, window))
-    f_full = float(objective(w, full_data))
-    return f_win, f_full
+__all__ = ["BETSchedule", "run_batch", "run_bet_fixed", "run_two_track",
+           "run_gradient_variance"]
 
 
 def run_batch(dataset, optimizer: BatchOptimizer, objective: Objective, *,
               steps: int, clock: SimulatedClock | None = None,
               w0=None, record_every: int = 1) -> Trace:
     """Fixed Batch baseline: the inner optimizer on the full dataset."""
-    clock = clock or SimulatedClock()
-    data = (dataset.X, dataset.y)
-    N = dataset.n
-    w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
-    state = optimizer.init(w)
-    step_fn = jax.jit(lambda p, s: optimizer.step(p, s, objective, data))
-    trace = Trace("batch", meta={"optimizer": optimizer.name})
-    for k in range(steps):
-        w, state, aux = step_fn(w, state)
-        clock.batch_update(N)
-        if k % record_every == 0 or k == steps - 1:
-            f = float(aux["f"])
-            trace.add(step=k, stage=0, window=N, time=clock.time,
-                      accesses=clock.data_accesses, f_window=f, f_full=f)
-    trace.params = w
-    return trace
+    policy = NeverExpand(steps=steps, record_every=record_every)
+    return BetEngine().run(dataset, optimizer, objective, policy,
+                           w0=w0, clock=clock, trace_name="batch")
 
 
 def run_bet_fixed(dataset, optimizer: BatchOptimizer, objective: Objective, *,
@@ -76,30 +44,10 @@ def run_bet_fixed(dataset, optimizer: BatchOptimizer, objective: Objective, *,
     ``final_steps`` continues on the full window until the step budget is
     spent (the `while stopping condition not met` tail of Alg. 2/3).
     """
-    clock = clock or SimulatedClock()
-    full_data = (dataset.X, dataset.y)
-    w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
-    state = optimizer.init(w)
-    trace = Trace("bet", meta={"optimizer": optimizer.name,
-                               "inner_steps": inner_steps})
-    step_count = 0
-    windows = schedule.windows(dataset.n)
-    for stage, n_t in enumerate(windows):
-        window = dataset.window(n_t)
-        state = optimizer.reset_memory(state)   # f̂_t changed; drop memory
-        step_fn = jax.jit(lambda p, s: optimizer.step(p, s, objective, window))
-        n_iters = inner_steps if n_t < dataset.n else final_steps
-        for _ in range(n_iters):
-            w, state, aux = step_fn(w, state)
-            clock.batch_update(n_t)
-            f_win = float(aux["f"])
-            f_full = float(objective(w, full_data))  # measurement only
-            trace.add(step=step_count, stage=stage, window=n_t,
-                      time=clock.time, accesses=clock.data_accesses,
-                      f_window=f_win, f_full=f_full)
-            step_count += 1
-    trace.params = w
-    return trace
+    policy = FixedSteps(inner_steps=inner_steps, final_steps=final_steps)
+    return BetEngine(schedule=schedule).run(
+        dataset, optimizer, objective, policy, w0=w0, clock=clock,
+        trace_name="bet", meta={"inner_steps": inner_steps})
 
 
 def run_two_track(dataset, optimizer: BatchOptimizer, objective: Objective, *,
@@ -115,61 +63,23 @@ def run_two_track(dataset, optimizer: BatchOptimizer, objective: Objective, *,
     secondary step is run per primary step (not two), trading a slightly later
     trigger for less overhead.
     """
-    clock = clock or SimulatedClock()
-    full_data = (dataset.X, dataset.y)
-    w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
-    trace = Trace("bet_two_track", meta={"optimizer": optimizer.name})
-    windows = schedule.windows(dataset.n)
-    step_count = 0
+    policy = TwoTrack(final_steps=final_steps,
+                      charge_condition_eval=charge_condition_eval)
+    return BetEngine(schedule=schedule).run(
+        dataset, optimizer, objective, policy, w0=w0, clock=clock,
+        probe=probe, trace_name="bet_two_track")
 
-    for stage in range(1, len(windows)):
-        n_prev, n_t = windows[stage - 1], windows[stage]
-        win_t, win_prev = dataset.window(n_t), dataset.window(n_prev)
-        w_slow, st_slow = w, optimizer.reset_memory(optimizer.init(w))
-        w_fast, st_fast = w, optimizer.init(w)
-        slow_step = jax.jit(lambda p, s: optimizer.step(p, s, objective, win_t))
-        fast_step = jax.jit(lambda p, s: optimizer.step(p, s, objective, win_prev))
-        eval_t = jax.jit(lambda p: objective(p, win_t))
-        slow_hist = []           # f̂_t(w_{t,k}) for k = 1..s
-        s_iter = 0
-        max_stage_iters = 500    # safety bound; condition (3) always fires
-        while True:
-            w_slow, st_slow, aux_s = slow_step(w_slow, st_slow)
-            clock.batch_update(n_t)
-            w_fast, st_fast, _ = fast_step(w_fast, st_fast)
-            clock.batch_update(n_prev)
-            s_iter += 1
-            slow_hist.append(float(aux_s["f"]))
-            f_fast_on_t = float(eval_t(w_fast))
-            if charge_condition_eval:
-                clock.eval_pass(n_t)
-            f_full = float(objective(w_slow, full_data))
-            extra = {"f_fast_on_t": f_fast_on_t}
-            if probe is not None:
-                extra["probe"] = float(probe(w_slow))
-            trace.add(step=step_count, stage=stage, window=n_t,
-                      time=clock.time, accesses=clock.data_accesses,
-                      f_window=slow_hist[-1], f_full=f_full, extra=extra)
-            step_count += 1
-            # condition (3): slow track at ⌊s/2⌋ already beats fast track at s
-            k = max(0, s_iter // 2 - 1)
-            if (s_iter >= 2 and slow_hist[k] < f_fast_on_t) \
-                    or s_iter >= max_stage_iters:
-                break
-        w = w_slow
 
-    # final phase: full window until budget spent
-    full_win = dataset.window(dataset.n)
-    state = optimizer.reset_memory(optimizer.init(w))
-    step_fn = jax.jit(lambda p, s: optimizer.step(p, s, objective, full_win))
-    for _ in range(final_steps):
-        w, state, aux = step_fn(w, state)
-        clock.batch_update(dataset.n)
-        f = float(aux["f"])
-        extra = {"probe": float(probe(w))} if probe is not None else {}
-        trace.add(step=step_count, stage=len(windows), window=dataset.n,
-                  time=clock.time, accesses=clock.data_accesses,
-                  f_window=f, f_full=f, extra=extra)
-        step_count += 1
-    trace.params = w
-    return trace
+def run_gradient_variance(dataset, optimizer: BatchOptimizer,
+                          objective: Objective, *,
+                          schedule: BETSchedule = BETSchedule(),
+                          theta: float = 0.5, final_steps: int = 40,
+                          clock: SimulatedClock | None = None,
+                          w0=None, **policy_kw) -> Trace:
+    """Beyond-paper: the DSM/AdaDamp gradient-variance trigger on BET's
+    resampling-free expanding window (see engine.GradientVariance)."""
+    policy = GradientVariance(theta=theta, final_steps=final_steps,
+                              **policy_kw)
+    return BetEngine(schedule=schedule).run(
+        dataset, optimizer, objective, policy, w0=w0, clock=clock,
+        meta={"theta": theta})

@@ -12,32 +12,24 @@ sensitivity parameter the paper's App. A.2 sweeps (Fig. 8); unlike BET, DSM's
 behaviour (and even convergence) depends on tuning it.  Because samples are
 resampled, cross-update optimizer memory is invalid: we reset it every step
 (the paper makes the same observation for CG under DSM).
+
+Device-side machinery is shared with core/engine.py: steps, objective
+evaluations and the variance test run through the engine's cached jitted
+kernels (re-traced only on new sample shapes, not per call), and the
+mini-batch baseline scans whole record intervals on device, landing each
+interval in the trace with one transfer.  The same trigger applied to BET's
+*expanding window* (no resampling) is ``engine.GradientVariance``.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..optim.api import BatchOptimizer, Objective
+from .engine import _KERNEL_CACHE, cached_eval, cached_step, cached_variance
 from .timemodel import SimulatedClock
 from .trace import Trace
-
-
-def _variance_ratio(objective: Objective, w, sample) -> float:
-    """‖Var_i ∇ℓ_i‖₁/|S|  vs  ‖ḡ‖² — computed via per-example gradients."""
-    X, y = sample
-
-    def per_example(xi, yi):
-        g = jax.grad(lambda p: objective(p, (xi[None, :], yi[None])))(w)
-        return g
-
-    gs = jax.vmap(per_example)(X, y)                 # (n, d)
-    gbar = jnp.mean(gs, axis=0)
-    var = jnp.mean((gs - gbar) ** 2, axis=0)         # diagonal variance
-    return float(jnp.sum(var) / X.shape[0]), float(jnp.sum(gbar ** 2))
 
 
 def run_dsm(dataset, optimizer: BatchOptimizer, objective: Objective, *,
@@ -52,34 +44,56 @@ def run_dsm(dataset, optimizer: BatchOptimizer, objective: Objective, *,
     n = n0
     trace = Trace("dsm", meta={"optimizer": optimizer.name, "theta": theta})
     Xn, yn = np.asarray(dataset.X), np.asarray(dataset.y)
+    step_fn = cached_step(optimizer, objective)
+    var_fn = cached_variance(objective)
+    eval_fn = cached_eval(objective)
 
     for k in range(steps):
         idx = rng.choice(N, size=min(n, N), replace=False)
         sample = (jnp.asarray(Xn[idx]), jnp.asarray(yn[idx]))
         state = optimizer.reset_memory(optimizer.init(w))  # no cross-sample memory
-        w, state, aux = optimizer.step(w, state, objective, sample)
+        w, state, aux = step_fn(w, state, sample)
         clock.stochastic_update(len(idx))                  # resampled accesses
         # variance test on a bounded probe (cost charged as compute)
         probe = min(len(idx), 512)
-        v, g2 = _variance_ratio(objective, w, (sample[0][:probe], sample[1][:probe]))
+        v, g2 = var_fn(w, sample, k=probe)
+        v, g2 = float(v), float(g2)
         clock.eval_pass(probe)
         if v > (theta ** 2) * max(g2, 1e-30) and n < N:
             n = min(N, int(np.ceil(n * growth)))
-        f_full = float(objective(w, full_data))
+        f_full = float(eval_fn(w, full_data))
         trace.add(step=k, stage=0, window=n, time=clock.time,
                   accesses=clock.data_accesses, f_window=float(aux["f"]),
                   f_full=f_full, extra={"var": v, "g2": g2})
-        if n >= N and v <= (theta ** 2) * max(g2, 1e-30):
-            pass  # keep iterating on full batches until step budget
     trace.params = w
     return trace
+
+
+def _minibatch_scan(optimizer: BatchOptimizer, objective: Objective):
+    """Scan a stack of pre-drawn mini-batches on device, returning per-step
+    objectives and the full-data value at the end of the block."""
+    key = ("minibatch_scan", optimizer, objective)
+    if key not in _KERNEL_CACHE:
+        def kernel(params, state, Xc, yc, full_data):
+            def body(carry, batch):
+                p, s = carry
+                p, s, aux = optimizer.step(p, s, objective, batch)
+                return (p, s), aux["f"]
+            (params, state), fs = jax.lax.scan(body, (params, state), (Xc, yc))
+            return params, state, fs, objective(params, full_data)
+        _KERNEL_CACHE[key] = jax.jit(kernel)
+    return _KERNEL_CACHE[key]
 
 
 def run_minibatch(dataset, optimizer: BatchOptimizer, objective: Objective, *,
                   batch_size: int = 64, steps: int = 2000,
                   clock: SimulatedClock | None = None, w0=None,
                   seed: int = 0, record_every: int = 20) -> Trace:
-    """Mini-batch stochastic baseline (Adagrad in the paper's §5)."""
+    """Mini-batch stochastic baseline (Adagrad in the paper's §5).
+
+    Runs each record interval as one device-side scan over the interval's
+    pre-drawn batches — one transfer per recorded point instead of per step.
+    """
     clock = clock or SimulatedClock()
     full_data = (dataset.X, dataset.y)
     N = dataset.n
@@ -87,18 +101,29 @@ def run_minibatch(dataset, optimizer: BatchOptimizer, objective: Objective, *,
     w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
     state = optimizer.init(w)
     Xn, yn = np.asarray(dataset.X), np.asarray(dataset.y)
-    step_fn = jax.jit(lambda p, s, d: optimizer.step(p, s, objective, d))
+    scan_fn = _minibatch_scan(optimizer, objective)
     trace = Trace("minibatch", meta={"optimizer": optimizer.name,
                                      "batch_size": batch_size})
-    for k in range(steps):
-        idx = rng.choice(N, size=batch_size, replace=False)
-        batch = (jnp.asarray(Xn[idx]), jnp.asarray(yn[idx]))
-        w, state, aux = step_fn(w, state, batch)
-        clock.stochastic_update(batch_size)
-        if k % record_every == 0 or k == steps - 1:
-            f_full = float(objective(w, full_data))
-            trace.add(step=k, stage=0, window=batch_size, time=clock.time,
-                      accesses=clock.data_accesses, f_window=float(aux["f"]),
-                      f_full=f_full)
+    if steps <= 0:
+        trace.params = w
+        return trace
+    # record points exactly as the legacy loop: every record_every-th step
+    # plus the last; scan the gaps between them in single device calls
+    record_at = sorted({k for k in range(steps) if k % record_every == 0}
+                       | {steps - 1})
+    start = 0
+    for k_rec in record_at:
+        block = range(start, k_rec + 1)
+        idx = np.stack([rng.choice(N, size=batch_size, replace=False)
+                        for _ in block])
+        Xc, yc = jnp.asarray(Xn[idx]), jnp.asarray(yn[idx])
+        w, state, fs, f_full = scan_fn(w, state, Xc, yc, full_data)
+        fs, f_full = np.asarray(fs), float(f_full)
+        for _ in block:
+            clock.stochastic_update(batch_size)
+        trace.add(step=k_rec, stage=0, window=batch_size, time=clock.time,
+                  accesses=clock.data_accesses, f_window=float(fs[-1]),
+                  f_full=f_full)
+        start = k_rec + 1
     trace.params = w
     return trace

@@ -1,0 +1,613 @@
+"""Unified Batch-Expansion Training engine.
+
+The paper's central claim is that BET "can be easily paired with most batch
+optimizers" and that the *when-to-expand* decision is orthogonal to the
+*how-to-step* loop.  This module factors the repo accordingly:
+
+  * ``ExpansionPolicy`` — a small protocol (``stage_begin`` /
+    ``should_expand`` / ``stage_end`` plus a ``plan_steps`` sizing hook)
+    that decides when the window grows.  Shipped policies:
+
+      - ``FixedSteps``        Algorithm 1/3: κ̂ inner iterations per stage,
+      - ``TwoTrack``          Algorithm 2: the parameter-free condition (3),
+      - ``NeverExpand``       the Batch baseline (one full-window stage),
+      - ``GradientVariance``  beyond-paper: the Byrd et al. (2012) /
+                              AdaDamp-style norm test applied to BET's
+                              resampling-free expanding window.
+
+  * ``BetEngine.run(dataset, optimizer, objective, policy, ...)`` — the one
+    driver behind ``run_batch`` / ``run_bet_fixed`` / ``run_two_track``
+    (core/bet.py), the DSM helpers (core/dsm.py) and the distributed LM
+    path (launch/train.py).
+
+Stages execute **device-side**: inner iterations run in chunks through
+``BatchOptimizer.run`` (``lax.scan``) with donated carries; the Two-Track
+race runs as a single ``lax.while_loop`` with its condition-(3) trigger
+evaluated on device.  Per-step measurements — f̂_t(w), f̂(w) and the
+time-model inputs — accumulate in device arrays and are transferred to the
+host **once per stage** (``trace.meta["host_transfers"]`` counts the
+``device_get`` calls), eliminating the legacy drivers' 2–3 blocking host
+syncs per inner step.  Jitted stage kernels are cached per
+(optimizer, objective, kernel-flavor) in a module-level table, so repeated
+stages — and repeated runs — with the same window shape never re-trace; the
+legacy loops re-jitted a fresh lambda every stage.
+
+The host-side originals are preserved verbatim in core/legacy.py for A/B
+parity tests and benchmarks/bench_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim.api import BatchOptimizer, Objective
+from .timemodel import SimulatedClock
+from .trace import Trace
+
+
+# ------------------------------------------------------------------ schedule
+@dataclasses.dataclass(frozen=True)
+class BETSchedule:
+    """Stage schedule: n_{t+1} = growth * n_t (paper: growth=2, §3.5 notes the
+    factor is not critical), ε_{t+1} = ε_t / growth."""
+    n0: int = 200
+    growth: float = 2.0
+
+    def __post_init__(self):
+        if self.n0 < 1:
+            raise ValueError(f"BETSchedule.n0 must be >= 1, got {self.n0}")
+        if not self.growth > 1.0:
+            raise ValueError(
+                f"BETSchedule.growth must be > 1, got {self.growth}: the "
+                "window n_t = n0 * growth^t would never reach the dataset")
+
+    def windows(self, N: int) -> list[int]:
+        ns, n = [], self.n0
+        while n < N:
+            ns.append(n)
+            n = min(N, int(math.ceil(n * self.growth)))
+        ns.append(N)
+        return ns
+
+
+# ------------------------------------------------------------------ protocol
+@dataclasses.dataclass
+class StageInfo:
+    """What a policy sees about the current stage."""
+    stage: int
+    n_t: int
+    n_prev: int
+    is_final: bool
+    N: int
+
+
+class StageRecords:
+    """Host-side accumulator for one stage's transferred measurements."""
+
+    def __init__(self):
+        self._f_window: list[np.ndarray] = []
+        self._f_full: list[np.ndarray] = []
+        self._params: list[Any] = []          # per-chunk stacked param pytrees
+        self.f_fast_on_t: np.ndarray | None = None   # two-track only
+        self.triggered: bool = False                  # two-track condition (3)
+        self.var: float = 0.0                         # gradient-variance stats
+        self.g2: float = 0.0
+
+    def add_chunk(self, f_window, f_full=None, params=None):
+        self._f_window.append(np.asarray(f_window))
+        if f_full is not None:
+            self._f_full.append(np.asarray(f_full))
+        if params is not None:
+            self._params.append(params)
+
+    @property
+    def steps(self) -> int:
+        return sum(len(c) for c in self._f_window)
+
+    def chunk_lengths(self) -> list[int]:
+        return [len(c) for c in self._f_window]
+
+    def f_window(self) -> np.ndarray:
+        return np.concatenate(self._f_window) if self._f_window else np.empty(0)
+
+    def f_full(self) -> np.ndarray:
+        if not self._f_full:
+            return self.f_window()          # policy opted out of full evals
+        return np.concatenate(self._f_full)
+
+    def param_at(self, i: int):
+        """The (host) parameter pytree after inner step ``i`` of this stage."""
+        for chunk in self._params:
+            k = len(jax.tree_util.tree_leaves(chunk)[0])
+            if i < k:
+                return jax.tree_util.tree_map(lambda b: b[i], chunk)
+            i -= k
+        raise IndexError(i)
+
+
+class ExpansionPolicy:
+    """When-to-expand protocol.  The engine owns stepping, clock accounting
+    and tracing; the policy only answers scheduling questions:
+
+      stage_begin(info)            — a new window n_t is about to run
+      plan_steps(info, done)       — how many inner steps to scan before the
+                                     next should_expand consultation
+      should_expand(info, records) — stage over?  (records hold everything
+                                     transferred so far this stage)
+      stage_end(info, records)     — the stage finished
+
+    ``kind == "two_track"`` routes stages through the while_loop race kernel
+    (the trigger then fires on device and ``should_expand`` just confirms
+    it); every other policy runs scan chunks.
+    """
+    name = "policy"
+    kind = "scan"               # "scan" | "two_track"
+    eval_full = True            # evaluate f̂(w) per step (False: f_full := f_window)
+    wants_variance = False      # compute per-example gradient-variance stats
+    record_every = 1
+    probe = 0
+
+    def windows(self, schedule: BETSchedule, N: int) -> list[int]:
+        return schedule.windows(N)
+
+    def stage_begin(self, info: StageInfo) -> None:
+        pass
+
+    def plan_steps(self, info: StageInfo, done_steps: int) -> int:
+        raise NotImplementedError
+
+    def should_expand(self, info: StageInfo, records: StageRecords) -> bool:
+        return True
+
+    def stage_end(self, info: StageInfo, records: StageRecords) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class FixedSteps(ExpansionPolicy):
+    """Algorithm 1/3: a fixed κ̂ inner iterations per stage, ``final_steps``
+    on the full window (Theorem 4.1 sets κ̂ from the inner rate; §4.2: 2–4)."""
+    inner_steps: int = 8
+    final_steps: int = 40
+    name = "bet"
+
+    def plan_steps(self, info, done_steps):
+        return self.final_steps if info.is_final else self.inner_steps
+
+
+@dataclasses.dataclass
+class NeverExpand(ExpansionPolicy):
+    """The Batch baseline: a single stage on the full dataset."""
+    steps: int = 30
+    record_every: int = 1
+    eval_full: bool = False     # window == full data; legacy records f_full := f
+    name = "batch"
+
+    def windows(self, schedule, N):
+        return [N]
+
+    def plan_steps(self, info, done_steps):
+        return self.steps
+
+
+@dataclasses.dataclass
+class TwoTrack(ExpansionPolicy):
+    """Algorithm 2: primary (slow) track on n_t races a secondary (fast)
+    track on n_{t-1} from the same stage-start point; expansion triggers on
+    condition (3): f̂_t(w_{t,⌊s/2⌋}) < f̂_t(w'_{t-1,s}).  Parameter-free.
+
+    ``condition="aux"`` compares the slow track's own per-step objective
+    (the convex drivers); ``condition="eval"`` re-evaluates both tracks on a
+    probe of the stage window (the stochastic LM path)."""
+    final_steps: int = 40
+    max_stage_iters: int = 500          # safety bound; condition (3) always fires
+    charge_condition_eval: bool = True
+    condition: str = "aux"              # "aux" | "eval"
+    final_eval_full: bool = False       # legacy final phase records f_full := f
+    name = "bet_two_track"
+    kind = "two_track"
+
+    def plan_steps(self, info, done_steps):        # final phase only
+        return self.final_steps
+
+    def should_expand(self, info, records):
+        if records.f_fast_on_t is not None:   # racing stage: device-side trigger
+            return records.triggered or records.steps >= self.max_stage_iters
+        return records.steps >= self.final_steps    # final phase budget spent
+
+
+@dataclasses.dataclass
+class GradientVariance(ExpansionPolicy):
+    """Beyond-paper adaptive trigger: the gradient-variance "norm test" of
+    DSM (Byrd, Chin, Nocedal, Wu 2012) / AdaDamp (Alfarra et al.), applied
+    to BET's *resampling-free* expanding window.  After each chunk the
+    engine measures, on a ``probe``-point prefix of the resident window,
+
+        v = ‖Var_i ∇ℓ_i(w)‖₁ / k     vs     g² = ‖∇f̂_t(w)‖² ;
+
+    once noise dominates signal (v > θ² g²) the window's gradient has no
+    more to teach and the stage ends.  Unlike DSM this touches no new data
+    until the expansion itself, so Thm 4.1's access bound still applies.
+    Expansion is monotone by construction (windows are nested prefixes).
+    Requires ``data = (X, y)`` with per-example rows (the convex path)."""
+    theta: float = 0.5
+    probe: int = 256
+    chunk: int = 4
+    min_stage_steps: int = 2
+    max_stage_iters: int = 64
+    final_steps: int = 40
+    name = "bet_gradvar"
+    wants_variance = True
+
+    def plan_steps(self, info, done_steps):
+        return self.final_steps if info.is_final else self.chunk
+
+    def should_expand(self, info, records):
+        if info.is_final or records.steps >= self.max_stage_iters:
+            return True
+        if records.steps < self.min_stage_steps:
+            return False
+        return records.var > (self.theta ** 2) * max(records.g2, 1e-30)
+
+
+# ------------------------------------------------------------ stage kernels
+_KERNEL_CACHE: dict[tuple, Callable] = {}
+
+
+def _donate(n: int) -> tuple:
+    # Buffer donation is a no-op (with a warning) on CPU; only request it
+    # where the backend honors it.
+    return tuple(range(n)) if jax.default_backend() != "cpu" else ()
+
+
+def variance_stats(objective: Objective, w, data, k: int):
+    """(‖Var_i ∇ℓ_i‖₁ / k, ‖ḡ‖²) over the first ``k`` rows of (X, y) —
+    per-example gradients via vmap; the DSM / GradientVariance test."""
+    X, y = data
+    Xp, yp = X[:k], y[:k]
+
+    def per_example(xi, yi):
+        return jax.grad(objective)(w, (xi[None], yi[None]))
+
+    gs = jax.vmap(per_example)(Xp, yp)
+    gbar = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), gs)
+    var = jax.tree_util.tree_map(
+        lambda g, m: jnp.mean((g - m) ** 2, axis=0), gs, gbar)
+    v = jax.tree_util.tree_reduce(
+        jnp.add, jax.tree_util.tree_map(jnp.sum, var), jnp.float32(0.0)) / k
+    g2 = jax.tree_util.tree_reduce(
+        jnp.add, jax.tree_util.tree_map(lambda m: jnp.sum(m ** 2), gbar),
+        jnp.float32(0.0))
+    return v, g2
+
+
+def cached_step(optimizer: BatchOptimizer, objective: Objective) -> Callable:
+    """A jitted single step, cached per (optimizer, objective) so repeated
+    callers (e.g. the DSM loop) re-trace only on new data shapes."""
+    key = ("step", optimizer, objective)
+    if key not in _KERNEL_CACHE:
+        _KERNEL_CACHE[key] = jax.jit(
+            lambda p, s, d: optimizer.step(p, s, objective, d))
+    return _KERNEL_CACHE[key]
+
+
+def cached_eval(objective: Objective) -> Callable:
+    """A jitted ``objective(w, data)``, cached per objective."""
+    key = ("eval", objective)
+    if key not in _KERNEL_CACHE:
+        _KERNEL_CACHE[key] = jax.jit(objective)
+    return _KERNEL_CACHE[key]
+
+
+def cached_variance(objective: Objective) -> Callable:
+    """Jitted ``variance_stats`` with a static probe size."""
+    key = ("var", objective)
+    if key not in _KERNEL_CACHE:
+        _KERNEL_CACHE[key] = jax.jit(
+            lambda w, d, k: variance_stats(objective, w, d, k),
+            static_argnames=("k",))
+    return _KERNEL_CACHE[key]
+
+
+def _scan_kernel(optimizer, objective, *, eval_full: bool,
+                 collect_params: bool, variance: bool) -> Callable:
+    """One stage chunk: ``num_steps`` inner iterations via BatchOptimizer.run
+    (lax.scan), with per-step measurements accumulated on device."""
+    key = ("scan", optimizer, objective, eval_full, collect_params, variance)
+    if key in _KERNEL_CACHE:
+        return _KERNEL_CACHE[key]
+
+    def kernel(params, state, window, full_data, num_steps, probe_k):
+        def collect(p, aux):
+            out = {"f": aux["f"]}
+            if eval_full:
+                out["f_full"] = objective(p, full_data)
+            if collect_params:
+                out["w"] = p
+            return out
+
+        params, state, outs = optimizer.run(params, state, objective, window,
+                                            num_steps, collect=collect)
+        res = {"params": params, "state": state, **outs}
+        if variance:
+            res["var"], res["g2"] = variance_stats(
+                objective, params, window, probe_k)
+        return res
+
+    jitted = jax.jit(kernel, static_argnames=("num_steps", "probe_k"),
+                     donate_argnums=_donate(2))
+    _KERNEL_CACHE[key] = jitted
+    return jitted
+
+
+def _two_track_kernel(optimizer, objective, *, condition_eval: bool,
+                      collect_params: bool) -> Callable:
+    """One full Two-Track racing stage as a device-side lax.while_loop:
+    both tracks step, condition (3) is tested on device against a history
+    buffer, and the stage's per-step measurements come back in one pull."""
+    key = ("two_track", optimizer, objective, condition_eval, collect_params)
+    if key in _KERNEL_CACHE:
+        return _KERNEL_CACHE[key]
+
+    def kernel(w, st_slow, st_fast, win_t, win_prev, full_data, max_iters):
+        M = max_iters
+        zeros = jnp.zeros((M,), jnp.float32)
+        W0 = (jax.tree_util.tree_map(
+            lambda x: jnp.zeros((M,) + x.shape, x.dtype), w)
+            if collect_params else None)
+
+        def cond(c):
+            return jnp.logical_and(~c["done"], c["s"] < M)
+
+        def body(c):
+            w_s, st_s, aux = optimizer.step(c["w_slow"], c["st_slow"],
+                                            objective, win_t)
+            w_f, st_f, _ = optimizer.step(c["w_fast"], c["st_fast"],
+                                          objective, win_prev)
+            f_slow = objective(w_s, win_t) if condition_eval else aux["f"]
+            f_fast = objective(w_f, win_t)
+            f_full = objective(w_s, full_data)
+            s = c["s"]
+            hs = c["hist_slow"].at[s].set(f_slow)
+            hf = c["hist_fast"].at[s].set(f_fast)
+            hfull = c["hist_full"].at[s].set(f_full)
+            nxt = dict(w_slow=w_s, st_slow=st_s, w_fast=w_f, st_fast=st_f,
+                       s=s + 1, hist_slow=hs, hist_fast=hf, hist_full=hfull)
+            if collect_params:
+                nxt["W"] = jax.tree_util.tree_map(
+                    lambda b, v: b.at[s].set(v), c["W"], w_s)
+            # condition (3): slow at ⌊s/2⌋ already beats fast at s
+            s1 = s + 1
+            k = jnp.maximum(0, s1 // 2 - 1)
+            nxt["done"] = jnp.logical_and(s1 >= 2, hs[k] < f_fast)
+            return nxt
+
+        init = dict(w_slow=w, st_slow=st_slow, w_fast=w, st_fast=st_fast,
+                    s=jnp.int32(0), done=jnp.bool_(False),
+                    hist_slow=zeros, hist_fast=zeros, hist_full=zeros)
+        if collect_params:
+            init["W"] = W0
+        final = jax.lax.while_loop(cond, body, init)
+        out = {"params": final["w_slow"], "state": final["st_slow"],
+               "s": final["s"], "triggered": final["done"],
+               "f_slow": final["hist_slow"], "f_fast": final["hist_fast"],
+               "f_full": final["hist_full"]}
+        if collect_params:
+            out["W"] = final["W"]
+        return out
+
+    jitted = jax.jit(kernel, static_argnames=("max_iters",),
+                     donate_argnums=_donate(3))
+    _KERNEL_CACHE[key] = jitted
+    return jitted
+
+
+# ---------------------------------------------------------------- the engine
+@dataclasses.dataclass
+class BetEngine:
+    """The single BET driver.  Policies decide *when* to expand; the engine
+    owns stepping (device-side), clock accounting (host replay of the §4.2
+    charges after each once-per-stage transfer) and tracing.
+
+    ``step_cost`` maps the stage window n_t to the points one inner step
+    charges the clock: the convex drivers pay the whole window (default);
+    the LM path pays one mini-batch.  ``wait_on_expand`` blocks the clock on
+    window residency at stage entry (the ExpandingWindow.grow contract);
+    ``carry_state`` keeps optimizer state across Two-Track stages instead of
+    re-initializing (the LM path's persistent Adam moments)."""
+    schedule: BETSchedule = dataclasses.field(default_factory=BETSchedule)
+    step_cost: Callable[[int], int] | None = None
+    wait_on_expand: bool = False
+    carry_state: bool = False
+    max_engine_steps: int = 100_000     # runaway-policy backstop
+
+    def run(self, dataset, optimizer: BatchOptimizer, objective: Objective,
+            policy: ExpansionPolicy, *, w0=None, clock: SimulatedClock | None = None,
+            eval_data=None, probe: Callable | None = None,
+            trace_name: str | None = None, meta: dict | None = None,
+            progress: Callable | None = None) -> Trace:
+        clock = clock or SimulatedClock()
+        N = dataset.n
+        full_data = eval_data if eval_data is not None else dataset.window(N)
+        w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
+        # private copy: stage kernels donate their carries, which must never
+        # invalidate a caller-owned w0 buffer
+        w = jax.tree_util.tree_map(jnp.array, w)
+        state = optimizer.init(w)
+        trace = Trace(trace_name or policy.name,
+                      meta={"engine": "BetEngine", "policy": policy.name,
+                            "optimizer": optimizer.name, **(meta or {})})
+        cost = self.step_cost or (lambda n: n)
+        run_ctx = {"trace": trace, "clock": clock, "cost": cost,
+                   "probe": probe, "progress": progress,
+                   "step_count": 0, "transfers": 0, "stages": 0}
+
+        windows = policy.windows(self.schedule, N)
+        if policy.kind == "two_track":
+            w, state = self._run_two_track(
+                run_ctx, dataset, optimizer, objective, policy, windows,
+                w, state, full_data)
+        else:
+            for stage, n_t in enumerate(windows):
+                info = StageInfo(stage=stage, n_t=n_t,
+                                 n_prev=windows[stage - 1] if stage else n_t,
+                                 is_final=n_t >= N, N=N)
+                state = optimizer.reset_memory(state)  # f̂_t changed
+                w, state = self._run_scan_stage(
+                    run_ctx, dataset, optimizer, objective, policy, info,
+                    w, state, full_data)
+        trace.params = w
+        trace.meta["host_transfers"] = run_ctx["transfers"]
+        trace.meta["stages"] = run_ctx["stages"]
+        return trace
+
+    # ------------------------------------------------------------ scan stages
+    def _run_scan_stage(self, ctx, dataset, optimizer, objective, policy,
+                        info: StageInfo, w, state, full_data, *,
+                        eval_full=None, extra_base=None):
+        clock, cost = ctx["clock"], ctx["cost"]
+        eval_full = policy.eval_full if eval_full is None else eval_full
+        collect_params = ctx["probe"] is not None
+        win = dataset.window(info.n_t)
+        if self.wait_on_expand:
+            clock.wait_for(info.n_t)
+        kernel = _scan_kernel(optimizer, objective, eval_full=eval_full,
+                              collect_params=collect_params,
+                              variance=policy.wants_variance)
+        probe_k = min(int(policy.probe), info.n_t) if policy.wants_variance else 0
+        policy.stage_begin(info)
+        rec = StageRecords()
+        while True:
+            k = int(policy.plan_steps(info, rec.steps))
+            out = kernel(w, state, win, full_data, num_steps=k,
+                         probe_k=probe_k)
+            w, state = out["params"], out["state"]
+            pulled = jax.device_get(
+                {n: v for n, v in out.items() if n not in ("params", "state")})
+            ctx["transfers"] += 1
+            rec.add_chunk(pulled["f"], pulled.get("f_full"), pulled.get("w"))
+            if policy.wants_variance:
+                rec.var, rec.g2 = float(pulled["var"]), float(pulled["g2"])
+            if policy.should_expand(info, rec):
+                break
+            if rec.steps > self.max_engine_steps:
+                raise RuntimeError(
+                    f"policy {policy.name} never expanded after {rec.steps} steps")
+        self._flush_stage(ctx, policy, info, rec, extra_base=extra_base,
+                          eval_charge=probe_k)
+        policy.stage_end(info, rec)
+        return w, state
+
+    def _flush_stage(self, ctx, policy, info: StageInfo, rec: StageRecords,
+                     *, extra_base=None, eval_charge: int = 0):
+        """Replay the §4.2 clock charges for the stage's inner steps and land
+        the whole stage in the trace with one Trace.extend call.
+
+        ``eval_charge`` > 0 bills one eval pass of that many points after
+        each chunk — the variance-trigger probe (charged like DSM's norm
+        test and TwoTrack's condition eval; measurement f̂ evals stay free)."""
+        clock, cost, trace = ctx["clock"], ctx["cost"], ctx["trace"]
+        fs, ffull = rec.f_window(), rec.f_full()
+        n = len(fs)
+        times = np.empty(n)
+        accs = np.empty(n, dtype=np.int64)
+        i = 0
+        for clen in rec.chunk_lengths():
+            for j in range(clen):
+                clock.batch_update(cost(info.n_t))
+                if eval_charge and j == clen - 1:
+                    clock.eval_pass(eval_charge)
+                times[i], accs[i] = clock.time, clock.data_accesses
+                i += 1
+        every = max(1, int(policy.record_every))
+        idx = [i for i in range(n) if i % every == 0 or i == n - 1]
+        extras = None
+        if ctx["probe"] is not None or extra_base:
+            extras = [dict(extra_base or {}) for _ in idx]
+            if ctx["probe"] is not None:
+                for j, i in enumerate(idx):
+                    extras[j]["probe"] = float(ctx["probe"](rec.param_at(i)))
+        new = trace.extend(
+            step=[ctx["step_count"] + i for i in idx], stage=info.stage,
+            window=info.n_t, time=times[idx], accesses=accs[idx],
+            f_window=fs[idx], f_full=ffull[idx], extra=extras)
+        ctx["step_count"] += n
+        ctx["stages"] += 1
+        if ctx["progress"]:
+            for p in new:
+                ctx["progress"](p)
+
+    # ------------------------------------------------------- two-track stages
+    def _run_two_track(self, ctx, dataset, optimizer, objective,
+                       policy: TwoTrack, windows, w, state, full_data):
+        clock, cost, trace = ctx["clock"], ctx["cost"], ctx["trace"]
+        collect_params = ctx["probe"] is not None
+        kernel = _two_track_kernel(optimizer, objective,
+                                   condition_eval=policy.condition == "eval",
+                                   collect_params=collect_params)
+        N = dataset.n
+        for stage in range(1, len(windows)):
+            n_prev, n_t = windows[stage - 1], windows[stage]
+            info = StageInfo(stage=stage, n_t=n_t, n_prev=n_prev,
+                             is_final=n_t >= N, N=N)
+            win_t, win_prev = dataset.window(n_t), dataset.window(n_prev)
+            if self.wait_on_expand:
+                clock.wait_for(n_t)
+            st_slow = optimizer.reset_memory(
+                state if self.carry_state else optimizer.init(w))
+            st_fast = optimizer.init(w)
+            policy.stage_begin(info)
+            out = kernel(w, st_slow, st_fast, win_t, win_prev, full_data,
+                         max_iters=int(policy.max_stage_iters))
+            w, state = out["params"], out["state"]
+            pulled = jax.device_get(
+                {n: v for n, v in out.items() if n not in ("params", "state")})
+            ctx["transfers"] += 1
+            s = int(pulled["s"])
+            rec = StageRecords()
+            rec.add_chunk(pulled["f_slow"][:s], pulled["f_full"][:s],
+                          jax.tree_util.tree_map(lambda b: b[:s], pulled["W"])
+                          if collect_params else None)
+            rec.f_fast_on_t = pulled["f_fast"][:s]
+            rec.triggered = bool(pulled["triggered"])
+            assert policy.should_expand(info, rec)
+            # replay the per-step clock charges: slow update, fast update,
+            # condition evaluation (charged per the paper unless disabled)
+            times = np.empty(s)
+            accs = np.empty(s, dtype=np.int64)
+            for i in range(s):
+                clock.batch_update(cost(n_t))
+                clock.batch_update(cost(n_prev))
+                if policy.charge_condition_eval:
+                    clock.eval_pass(cost(n_t))
+                times[i], accs[i] = clock.time, clock.data_accesses
+            extras = [{"f_fast_on_t": float(rec.f_fast_on_t[i])}
+                      for i in range(s)]
+            if ctx["probe"] is not None:
+                for i in range(s):
+                    extras[i]["probe"] = float(ctx["probe"](rec.param_at(i)))
+            new = trace.extend(
+                step=np.arange(ctx["step_count"], ctx["step_count"] + s),
+                stage=stage, window=n_t, time=times, accesses=accs,
+                f_window=rec.f_window(), f_full=rec.f_full(), extra=extras)
+            ctx["step_count"] += s
+            ctx["stages"] += 1
+            if ctx["progress"]:
+                for p in new:
+                    ctx["progress"](p)
+            policy.stage_end(info, rec)
+
+        # final phase: full window until the step budget is spent
+        info = StageInfo(stage=len(windows), n_t=N, n_prev=N,
+                         is_final=True, N=N)
+        state = optimizer.reset_memory(
+            state if self.carry_state else optimizer.init(w))
+        w, state = self._run_scan_stage(
+            ctx, dataset, optimizer, objective, policy, info, w, state,
+            full_data, eval_full=policy.final_eval_full)
+        return w, state

@@ -121,7 +121,7 @@ def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = hlo.raw_cost_analysis(compiled)
         text = compiled.as_text()
 
     acc = hlo.analyze(text)          # loop-aware: dots, collectives, traffic

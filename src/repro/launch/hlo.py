@@ -252,3 +252,12 @@ class Module:
 
 def analyze(hlo_text: str) -> dict:
     return Module(hlo_text).analyze()
+
+
+def raw_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: newer releases
+    return a list with one dict per partition; older ones a bare dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

@@ -2,12 +2,21 @@
 first-class schedule.
 
 This is the beyond-paper integration (DESIGN.md §2): BET's expanding window
-drives the data pipeline of a standard pjit LM training loop.  The same
-driver runs three schedules:
+drives the data pipeline of a standard pjit LM training loop.  The window
+scheduling itself is the unified policy engine (core/engine.py) — the same
+``BetEngine`` that runs the paper's convex experiments drives the LM path
+through two adapters:
 
-  * ``batch``     — fixed full-dataset schedule (the paper's Batch baseline),
-  * ``bet``       — Algorithm 1/3 (fixed inner steps per stage, doubling),
-  * ``two_track`` — Algorithm 2 (parameter-free expansion trigger).
+  * ``LMStepOptimizer`` wraps the pjit train step as a ``BatchOptimizer``
+    whose ``data`` is the resident token window; each inner step rotates a
+    mini-batch through the window *on device* (sequential epochs over
+    loaded data — no random disk access, the BET property),
+  * the objective evaluates the loss on a probe prefix of whatever token
+    block it is handed (the two-track condition (3) and eval measurements).
+
+Schedules map to policies: ``batch`` → NeverExpand, ``bet`` → FixedSteps
+(Alg. 1/3), ``two_track`` → TwoTrack (Alg. 2).  Stages run device-side in
+lax.scan / lax.while_loop chunks with a single host transfer per stage.
 
 On CPU it runs reduced configs end-to-end (examples/, tests); on real
 hardware the identical code paths run on the production mesh with the
@@ -22,19 +31,21 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import configs
+from ..core.engine import (BETSchedule, BetEngine, FixedSteps, NeverExpand,
+                           TwoTrack)
 from ..core.timemodel import SimulatedClock
 from ..core.trace import Trace
-from ..data.window import ExpandingWindow, synth_corpus
+from ..data.window import synth_corpus
 from ..models import transformer as T
+from ..optim.api import BatchOptimizer
 from . import steps
 from .mesh import make_host_mesh
-from .shardings import batch_partition, param_specs_tree, to_named
 
 
 @dataclasses.dataclass
@@ -49,11 +60,56 @@ class TrainConfig:
     lr: float = 1e-3
     seed: int = 0
     max_stage_steps: int = 200      # two-track safety bound
+    eval_rows: int = 64             # probe size for condition (3) / eval loss
 
 
-def _loss_on(cfg, params, batch_np, step_loss):
-    return float(step_loss(params, {"tokens": jnp.asarray(batch_np[:, :-1]),
-                                    "labels": jnp.asarray(batch_np[:, 1:])}))
+@dataclasses.dataclass(frozen=True)
+class LMStepOptimizer(BatchOptimizer):
+    """The pjit LM train step as a BatchOptimizer over token windows.
+
+    ``data`` is the resident (n_t, seq_len+1) token window; the step gathers
+    a rotating mini-batch from it on device, so whole stages scan without
+    host round-trips.  ``reset_memory`` is inherited as the identity: Adam
+    moments survive batch expansions (the LM objective is stochastic per
+    batch anyway, so stage boundaries do not invalidate them)."""
+    train_step: Callable = None
+    init_opt: Callable = None
+    batch_size: int = 8
+    name: str = "adamw_lm"
+
+    def init(self, params):
+        return {"opt": self.init_opt(params), "t": jnp.int32(0)}
+
+    def step(self, params, state, objective, data):
+        n = data.shape[0]
+        idx = (jnp.arange(self.batch_size) + state["t"] * self.batch_size) % n
+        rows = jnp.take(data, idx, axis=0)
+        batch = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+        params, opt, metrics = self.train_step(params, state["opt"], batch)
+        return params, {"opt": opt, "t": state["t"] + 1}, {"f": metrics["loss"]}
+
+
+@dataclasses.dataclass
+class TokenWindows:
+    """Engine-facing view of a pre-permuted token corpus: nested prefix
+    windows of one permutation (§3.3's data-access contract)."""
+    tokens: Any                    # (N, seq_len+1) int32, device
+
+    @property
+    def n(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def window(self, n_t: int):
+        return self.tokens[:n_t]
+
+
+def make_lm_objective(cfg, eval_rows: int = 64):
+    """loss(params, token block) on a bounded probe prefix of the block."""
+    def objective(params, toks):
+        k = min(eval_rows, toks.shape[0])
+        batch = {"tokens": toks[:k, :-1], "labels": toks[:k, 1:]}
+        return T.loss_fn(cfg, params, batch)[0]
+    return objective
 
 
 def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
@@ -62,89 +118,35 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
     clock = clock or SimulatedClock(preloaded=tc.n0)
     corpus = synth_corpus(tc.corpus_size, tc.seq_len + 1,
                           max(2, cfg.vocab_size), seed=tc.seed)
-    window = ExpandingWindow(corpus, tc.n0, clock=clock)
+    tokens = jnp.asarray(corpus)
+    data = TokenWindows(tokens)
+    eval_tokens = tokens[:: max(1, len(corpus) // tc.eval_rows)][: tc.eval_rows]
 
     params = T.init_params(cfg, jax.random.key(tc.seed))
-    opt_state = steps.init_opt_state(params)
-    train_step = jax.jit(steps.make_train_step(cfg, lr=tc.lr))
-    loss_eval = jax.jit(lambda p, b: T.loss_fn(cfg, p, b)[0])
-
-    trace = Trace(f"lm_{tc.schedule}", meta={"arch": cfg.name})
-    eval_batch = corpus[:: max(1, len(corpus) // 64)][:64]
-
-    def batch_of(win_arr, step):
-        idx = (np.arange(tc.batch_size) + step * tc.batch_size) % len(win_arr)
-        b = win_arr[idx]
-        return {"tokens": jnp.asarray(b[:, :-1]), "labels": jnp.asarray(b[:, 1:])}
-
-    step_count = 0
-
-    def record(stage, loss):
-        f_full = _loss_on(cfg, params, eval_batch, loss_eval)
-        trace.add(step=step_count, stage=stage, window=window.n_t,
-                  time=clock.time, accesses=clock.data_accesses,
-                  f_window=loss, f_full=f_full)
-        if progress:
-            progress(trace.points[-1])
+    optimizer = LMStepOptimizer(train_step=steps.make_train_step(cfg, lr=tc.lr),
+                                init_opt=steps.init_opt_state,
+                                batch_size=tc.batch_size)
+    objective = make_lm_objective(cfg, tc.eval_rows)
 
     if tc.schedule == "batch":
-        window.n_t = window.N
-        clock.wait_for(window.N)
-
-    if tc.schedule in ("batch", "bet"):
-        stage = 0
-        while True:
-            win = window.window()
-            for _ in range(tc.inner_steps if not window.full else tc.final_steps):
-                params, opt_state, m = train_step(params, opt_state,
-                                                  batch_of(win, step_count))
-                clock.batch_update(tc.batch_size)
-                record(stage, float(m["loss"]))
-                step_count += 1
-            if window.full:
-                break
-            window.grow()
-            stage += 1
+        policy = NeverExpand(steps=tc.final_steps, eval_full=True)
+    elif tc.schedule == "bet":
+        policy = FixedSteps(inner_steps=tc.inner_steps,
+                            final_steps=tc.final_steps)
     elif tc.schedule == "two_track":
-        stage = 0
-        while not window.full:
-            window.grow()
-            stage += 1
-            win_t, win_prev = window.window(), window.previous_window()
-            p_fast, o_fast = params, steps.init_opt_state(params)
-            slow_hist = []
-            s_iter = 0
-            while True:
-                params, opt_state, m = train_step(params, opt_state,
-                                                  batch_of(win_t, step_count))
-                clock.batch_update(tc.batch_size)
-                p_fast, o_fast, _ = train_step(p_fast, o_fast,
-                                               batch_of(win_prev, step_count))
-                clock.batch_update(tc.batch_size)
-                s_iter += 1
-                # condition (3): compare on a window-t probe batch
-                probe = batch_of(win_t, 0)
-                f_slow = float(loss_eval(params, probe))
-                f_fast = float(loss_eval(p_fast, probe))
-                clock.eval_pass(tc.batch_size)
-                slow_hist.append(f_slow)
-                record(stage, f_slow)
-                step_count += 1
-                k = max(0, s_iter // 2 - 1)
-                if (s_iter >= 2 and slow_hist[k] < f_fast) \
-                        or s_iter >= tc.max_stage_steps:
-                    break
-        for _ in range(tc.final_steps):
-            params, opt_state, m = train_step(params, opt_state,
-                                              batch_of(window.window(), step_count))
-            clock.batch_update(tc.batch_size)
-            record(stage + 1, float(m["loss"]))
-            step_count += 1
+        policy = TwoTrack(final_steps=tc.final_steps,
+                          max_stage_iters=tc.max_stage_steps,
+                          condition="eval", final_eval_full=True)
     else:
         raise ValueError(tc.schedule)
 
-    trace.params = params
-    return trace
+    engine = BetEngine(schedule=BETSchedule(n0=tc.n0),
+                       step_cost=lambda n_t: tc.batch_size,
+                       wait_on_expand=True, carry_state=True)
+    return engine.run(data, optimizer, objective, policy, w0=params,
+                      clock=clock, eval_data=eval_tokens,
+                      trace_name=f"lm_{tc.schedule}",
+                      meta={"arch": cfg.name}, progress=progress)
 
 
 def main() -> None:

@@ -126,11 +126,20 @@ class BatchOptimizer:
         return state
 
     # convenience: a jitted multi-step driver (objective is static)
-    def run(self, params, state, objective: Objective, data, num_steps: int):
+    def run(self, params, state, objective: Objective, data, num_steps: int,
+            *, collect: Callable | None = None):
+        """lax.scan ``num_steps`` inner iterations on fixed ``data``.
+
+        ``collect(params, aux)`` customizes the per-step record (default:
+        the scalar objective ``aux["f"]``); it may return any pytree, which
+        comes back stacked along the step axis.  This is the device-side
+        stage primitive used by core/engine.py.
+        """
         def body(carry, _):
             p, s = carry
             p, s, aux = self.step(p, s, objective, data)
-            return (p, s), aux["f"]
+            out = aux["f"] if collect is None else collect(p, aux)
+            return (p, s), out
         (params, state), fs = jax.lax.scan(body, (params, state), None,
                                            length=num_steps)
         return params, state, fs

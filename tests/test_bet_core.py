@@ -10,6 +10,8 @@ from repro.data.synthetic import load
 from repro.models.linear import init_params, make_objective, solve_reference
 from repro.optim import Adagrad, NewtonCG
 
+pytestmark = pytest.mark.tier1
+
 DS = load("w8a_like", scale=0.25)           # n = 2048
 OBJ = make_objective("squared_hinge", lam=1e-3)
 DATA = (DS.X, DS.y)

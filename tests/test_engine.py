@@ -1,0 +1,149 @@
+"""The unified BetEngine + ExpansionPolicy API: parity with the legacy
+host-side loops (core/legacy.py), the new GradientVariance policy, the
+once-per-stage transfer contract, and the schedule/trace hardening."""
+import numpy as np
+import pytest
+
+from repro.core import (BETSchedule, BetEngine, FixedSteps, GradientVariance,
+                        NeverExpand, SimulatedClock, Trace, TwoTrack, legacy,
+                        run_batch, run_bet_fixed, run_gradient_variance,
+                        run_two_track)
+from repro.data.synthetic import load
+from repro.models.linear import init_params, make_objective
+from repro.optim import NewtonCG
+
+pytestmark = pytest.mark.tier1
+
+DS = load("w8a_like", scale=0.125)          # n = 1024
+OBJ = make_objective("squared_hinge", lam=1e-3)
+W0 = init_params(DS.d)
+OPT = NewtonCG()
+SCHED = BETSchedule(n0=128)
+
+
+def _columns_equal(tr_a, tr_b, cols=("step", "stage", "window", "time",
+                                     "accesses")):
+    assert len(tr_a.points) == len(tr_b.points)
+    for col in cols:
+        assert tr_a.column(col) == tr_b.column(col), col
+
+
+# ------------------------------------------------------------ legacy parity
+def test_never_expand_matches_legacy_run_batch():
+    tr_e = run_batch(DS, OPT, OBJ, steps=10, record_every=3,
+                     clock=SimulatedClock(), w0=W0)
+    tr_l = legacy.run_batch(DS, OPT, OBJ, steps=10, record_every=3,
+                            clock=SimulatedClock(), w0=W0)
+    _columns_equal(tr_e, tr_l)
+    np.testing.assert_allclose(tr_e.column("f_window"), tr_l.column("f_window"),
+                               rtol=1e-5)
+    np.testing.assert_allclose(tr_e.column("f_full"), tr_l.column("f_full"),
+                               rtol=1e-5)
+
+
+def test_fixed_steps_matches_legacy_run_bet_fixed():
+    kw = dict(schedule=SCHED, inner_steps=4, final_steps=8, w0=W0)
+    tr_e = run_bet_fixed(DS, OPT, OBJ, clock=SimulatedClock(), **kw)
+    tr_l = legacy.run_bet_fixed(DS, OPT, OBJ, clock=SimulatedClock(), **kw)
+    _columns_equal(tr_e, tr_l)
+    np.testing.assert_allclose(tr_e.column("f_window"), tr_l.column("f_window"),
+                               rtol=1e-5)
+    np.testing.assert_allclose(tr_e.column("f_full"), tr_l.column("f_full"),
+                               rtol=1e-5)
+
+
+def test_two_track_matches_legacy_expansion_points_and_loss():
+    """The device-side condition-(3) trigger fires at the same steps as the
+    legacy host loop: same per-stage iteration counts, same windows, same
+    final loss (the satellite acceptance check)."""
+    kw = dict(schedule=SCHED, final_steps=8, w0=W0)
+    tr_e = run_two_track(DS, OPT, OBJ, clock=SimulatedClock(), **kw)
+    tr_l = legacy.run_two_track(DS, OPT, OBJ, clock=SimulatedClock(), **kw)
+    # expansion points: the (stage, window) sequence must be identical
+    assert [(p.stage, p.window) for p in tr_e.points] == \
+           [(p.stage, p.window) for p in tr_l.points]
+    _columns_equal(tr_e, tr_l)
+    np.testing.assert_allclose(tr_e.column("f_window"), tr_l.column("f_window"),
+                               rtol=1e-5)
+    assert tr_e.final().f_window == pytest.approx(tr_l.final().f_window,
+                                                  rel=1e-5)
+    # per-step condition values travelled in the once-per-stage transfer
+    fast_e = [p.extra.get("f_fast_on_t") for p in tr_e.points]
+    fast_l = [p.extra.get("f_fast_on_t") for p in tr_l.points]
+    assert [f is None for f in fast_e] == [f is None for f in fast_l]
+    np.testing.assert_allclose([f for f in fast_e if f is not None],
+                               [f for f in fast_l if f is not None], rtol=1e-5)
+
+
+def test_two_track_probe_extra_matches_legacy():
+    probe = lambda w: float(np.sum(np.square(np.asarray(w))))
+    kw = dict(schedule=SCHED, final_steps=3, w0=W0, probe=probe)
+    tr_e = run_two_track(DS, OPT, OBJ, clock=SimulatedClock(), **kw)
+    tr_l = legacy.run_two_track(DS, OPT, OBJ, clock=SimulatedClock(), **kw)
+    np.testing.assert_allclose([p.extra["probe"] for p in tr_e.points],
+                               [p.extra["probe"] for p in tr_l.points],
+                               rtol=1e-5)
+
+
+# ------------------------------------------------- the new adaptive policy
+def test_gradient_variance_expands_monotonically():
+    tr = run_gradient_variance(DS, OPT, OBJ, schedule=SCHED, theta=0.5,
+                               final_steps=10, clock=SimulatedClock(), w0=W0)
+    windows = tr.column("window")
+    assert all(a <= b for a, b in zip(windows, windows[1:]))
+    assert windows[-1] == DS.n                 # reaches the full dataset
+    assert tr.final().f_full < tr.points[0].f_full
+    assert tr.meta["policy"] == "bet_gradvar"
+
+
+def test_gradient_variance_records_stats():
+    eng = BetEngine(schedule=SCHED)
+    tr = eng.run(DS, OPT, OBJ, GradientVariance(theta=0.5, final_steps=4),
+                 clock=SimulatedClock(), w0=W0)
+    # a non-final stage only ends when the variance test (or the cap) fires
+    assert tr.meta["stages"] == len(set(tr.column("stage")))
+
+
+# ------------------------------------------------------- engine contracts
+def test_engine_transfers_at_most_once_per_stage():
+    for policy in (FixedSteps(inner_steps=3, final_steps=4),
+                   TwoTrack(final_steps=4),
+                   NeverExpand(steps=5)):
+        tr = BetEngine(schedule=SCHED).run(DS, OPT, OBJ, policy,
+                                           clock=SimulatedClock(), w0=W0)
+        assert tr.meta["host_transfers"] <= tr.meta["stages"], policy.name
+
+
+def test_engine_does_not_invalidate_caller_w0():
+    w0 = init_params(DS.d)
+    BetEngine(schedule=SCHED).run(DS, OPT, OBJ, FixedSteps(2, 2),
+                                  clock=SimulatedClock(), w0=w0)
+    assert np.all(np.isfinite(np.asarray(w0)))  # donation never ate w0
+
+
+# ------------------------------------------------------------- hardening
+def test_schedule_rejects_non_expanding_growth():
+    with pytest.raises(ValueError):
+        BETSchedule(n0=100, growth=1.0)
+    with pytest.raises(ValueError):
+        BETSchedule(n0=100, growth=0.5)
+    with pytest.raises(ValueError):
+        BETSchedule(n0=0)
+    assert BETSchedule(n0=100, growth=1.0 + 1e-6).windows(200)[-1] == 200
+
+
+def test_trace_extend_batched_and_broadcast():
+    tr = Trace("t")
+    tr.extend(step=[0, 1, 2], stage=0, window=100,
+              time=np.array([1.0, 2.0, 3.0]), accesses=[10, 20, 30],
+              f_window=np.float32([3.0, 2.0, 1.0]), f_full=[3.0, 2.0, 1.0],
+              extra=[{}, {"k": 1}, {}])
+    assert len(tr.points) == 3
+    assert tr.points[1].extra == {"k": 1}
+    assert tr.points[2].time == 3.0 and tr.points[2].stage == 0
+    with pytest.raises(ValueError):
+        tr.extend(step=[0, 1], stage=0, window=1, time=[0.0], accesses=0,
+                  f_window=0.0, f_full=0.0)
+    with pytest.raises(ValueError):
+        tr.extend(step=1, stage=0, window=1, time=0.0, accesses=0,
+                  f_window=0.0, f_full=0.0)  # no sequence column

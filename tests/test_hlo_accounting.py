@@ -42,7 +42,7 @@ def test_scanned_matmul_flops_multiplied():
         (acc["flops"], want)
     # raw XLA cost_analysis undercounts exactly by the trip count
     compiled = jax.jit(fn).lower(x, ws).compile()
-    raw = compiled.cost_analysis().get("flops", 0.0)
+    raw = hlo.raw_cost_analysis(compiled).get("flops", 0.0)
     assert raw < acc["flops"] / 2
 
 
