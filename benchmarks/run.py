@@ -16,7 +16,7 @@ import traceback
 MODULES = ["fig2_simulated_runtime", "fig3_wallclock", "fig4_hw_accel",
            "fig5_parallel", "fig6_test_acc", "fig7_inner_opt",
            "fig8_dsm_theta", "table1_time_model", "thm41_data_access",
-           "ablation_schedule", "bench_engine", "roofline"]
+           "ablation_schedule", "bench_engine", "bench_data", "roofline"]
 
 
 def main() -> None:

@@ -48,8 +48,11 @@ for schedule in ("bet", "two_track", "batch"):
     tr = train_lm(cfg, tc, clock=clock)
     results[schedule] = tr
     p = tr.final()
+    dp = tr.meta.get("data_plane", {})
     print(f"{schedule:10s} steps={p.step+1:4d} sim_time={p.time:9.0f} "
-          f"final_eval_loss={p.f_full:.4f}")
+          f"final_eval_loss={p.f_full:.4f} "
+          f"loaded={dp.get('examples_loaded', '-')} "
+          f"overlap={dp.get('overlap_fraction', '-')}")
 
 # BET's systems win: eval loss at the moment Batch can take its FIRST step
 t0 = results["batch"].points[0].time

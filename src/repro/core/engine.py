@@ -78,12 +78,15 @@ class BETSchedule:
 # ------------------------------------------------------------------ protocol
 @dataclasses.dataclass
 class StageInfo:
-    """What a policy sees about the current stage."""
+    """What a policy sees about the current stage.  ``n_next`` is the
+    window the schedule will expand to afterwards (None on the last stage)
+    — the streaming data plane prefetches its shards during this stage."""
     stage: int
     n_t: int
     n_prev: int
     is_final: bool
     N: int
+    n_next: int | None = None
 
 
 class StageRecords:
@@ -433,6 +436,9 @@ class BetEngine:
             progress: Callable | None = None) -> Trace:
         clock = clock or SimulatedClock()
         N = dataset.n
+        # NB: with a StreamingDataset, omitting eval_data forces the whole
+        # corpus resident here (f̂ needs all N points) and defeats staged
+        # loading — pass an eval set/probe to keep the plane streaming.
         full_data = eval_data if eval_data is not None else dataset.window(N)
         w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
         # private copy: stage kernels donate their carries, which must never
@@ -444,7 +450,7 @@ class BetEngine:
                             "optimizer": optimizer.name, **(meta or {})})
         cost = self.step_cost or (lambda n: n)
         run_ctx = {"trace": trace, "clock": clock, "cost": cost,
-                   "probe": probe, "progress": progress,
+                   "probe": probe, "progress": progress, "dataset": dataset,
                    "step_count": 0, "transfers": 0, "stages": 0}
 
         windows = policy.windows(self.schedule, N)
@@ -456,7 +462,9 @@ class BetEngine:
             for stage, n_t in enumerate(windows):
                 info = StageInfo(stage=stage, n_t=n_t,
                                  n_prev=windows[stage - 1] if stage else n_t,
-                                 is_final=n_t >= N, N=N)
+                                 is_final=n_t >= N, N=N,
+                                 n_next=windows[stage + 1]
+                                 if stage + 1 < len(windows) else None)
                 state = optimizer.reset_memory(state)  # f̂_t changed
                 w, state = self._run_scan_stage(
                     run_ctx, dataset, optimizer, objective, policy, info,
@@ -466,6 +474,18 @@ class BetEngine:
         trace.meta["stages"] = run_ctx["stages"]
         return trace
 
+    # ---------------------------------------------------------- stage windows
+    @staticmethod
+    def _acquire_window(dataset, n_t: int, n_next: int | None):
+        """Stage setup against the data plane: a ``StreamingDataset`` makes
+        the stage window device-resident and starts prefetching the *next*
+        expansion's shards (so their loads overlap this stage's compute);
+        plain datasets fall back to the host-slice window protocol."""
+        begin = getattr(dataset, "begin_stage", None)
+        if begin is not None:
+            return begin(n_t, n_next)
+        return dataset.window(n_t)
+
     # ------------------------------------------------------------ scan stages
     def _run_scan_stage(self, ctx, dataset, optimizer, objective, policy,
                         info: StageInfo, w, state, full_data, *,
@@ -473,7 +493,7 @@ class BetEngine:
         clock, cost = ctx["clock"], ctx["cost"]
         eval_full = policy.eval_full if eval_full is None else eval_full
         collect_params = ctx["probe"] is not None
-        win = dataset.window(info.n_t)
+        win = self._acquire_window(dataset, info.n_t, info.n_next)
         if self.wait_on_expand:
             clock.wait_for(info.n_t)
         kernel = _scan_kernel(optimizer, objective, eval_full=eval_full,
@@ -516,14 +536,18 @@ class BetEngine:
         n = len(fs)
         times = np.empty(n)
         accs = np.empty(n, dtype=np.int64)
+        touched = 0
         i = 0
         for clen in rec.chunk_lengths():
             for j in range(clen):
                 clock.batch_update(cost(info.n_t))
+                touched += cost(info.n_t)
                 if eval_charge and j == clen - 1:
                     clock.eval_pass(eval_charge)
+                    touched += eval_charge
                 times[i], accs[i] = clock.time, clock.data_accesses
                 i += 1
+        self._note_access(ctx, touched)
         every = max(1, int(policy.record_every))
         idx = [i for i in range(n) if i % every == 0 or i == n - 1]
         extras = None
@@ -542,6 +566,14 @@ class BetEngine:
             for p in new:
                 ctx["progress"](p)
 
+    @staticmethod
+    def _note_access(ctx, examples: int) -> None:
+        """Report optimizer touches to the data plane's DataAccessMeter, in
+        the same units the SimulatedClock charges — real-read accounting."""
+        note = getattr(ctx["dataset"], "note_access", None)
+        if note is not None and examples:
+            note(examples)
+
     # ------------------------------------------------------- two-track stages
     def _run_two_track(self, ctx, dataset, optimizer, objective,
                        policy: TwoTrack, windows, w, state, full_data):
@@ -553,9 +585,11 @@ class BetEngine:
         N = dataset.n
         for stage in range(1, len(windows)):
             n_prev, n_t = windows[stage - 1], windows[stage]
+            n_next = windows[stage + 1] if stage + 1 < len(windows) else None
             info = StageInfo(stage=stage, n_t=n_t, n_prev=n_prev,
-                             is_final=n_t >= N, N=N)
-            win_t, win_prev = dataset.window(n_t), dataset.window(n_prev)
+                             is_final=n_t >= N, N=N, n_next=n_next)
+            win_t = self._acquire_window(dataset, n_t, n_next)
+            win_prev = dataset.window(n_prev)   # resident prefix: no loads
             if self.wait_on_expand:
                 clock.wait_for(n_t)
             st_slow = optimizer.reset_memory(
@@ -580,12 +614,16 @@ class BetEngine:
             # condition evaluation (charged per the paper unless disabled)
             times = np.empty(s)
             accs = np.empty(s, dtype=np.int64)
+            touched = 0
             for i in range(s):
                 clock.batch_update(cost(n_t))
                 clock.batch_update(cost(n_prev))
+                touched += cost(n_t) + cost(n_prev)
                 if policy.charge_condition_eval:
                     clock.eval_pass(cost(n_t))
+                    touched += cost(n_t)
                 times[i], accs[i] = clock.time, clock.data_accesses
+            self._note_access(ctx, touched)
             extras = [{"f_fast_on_t": float(rec.f_fast_on_t[i])}
                       for i in range(s)]
             if ctx["probe"] is not None:

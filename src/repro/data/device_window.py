@@ -1,0 +1,187 @@
+"""Device-resident expanding window.
+
+The PR 1 engine re-uploaded ``dataset.window(n_t)`` wholesale at every
+stage.  ``DeviceWindow`` replaces that with BET's actual contract (§3.3):
+one device buffer, preallocated at max capacity and sharded over the mesh's
+data axes, grown **in place** by ``dynamic_update_slice`` as shards arrive.
+Already-resident examples are never transferred again, and because the
+buffer's shape is fixed, kernels that consume a ``MaskedWindow`` (buffer +
+valid-length scalar) are traced once and reused across every expansion.
+
+Two views:
+
+  * ``masked(n)``  — fixed-shape ``MaskedWindow`` pytree; consumers index
+    ``% n_valid`` (the LM path; retrace-free across stages),
+  * ``slice(n)``   — a device-side prefix slice ``buf[:n]`` (the convex
+    path, whose objectives reduce over the leading axis and stay bit-exact
+    against host-side numpy slicing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .shards import DataAccessMeter
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MaskedWindow:
+    """A fixed-capacity token/row buffer with a device-side valid length.
+
+    Passing this (instead of a ``buf[:n_t]`` slice) through jitted stage
+    kernels keeps their signatures shape-stable: expansion changes only the
+    ``n_valid`` scalar, so cached kernels never re-trace."""
+    data: Any                   # (capacity, *item_shape) device array
+    n_valid: Any                # () int32 device scalar
+
+    def tree_flatten(self):
+        return (self.data, self.n_valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+
+def window_rows(data):
+    """(rows, n) for either a ``MaskedWindow`` or a plain row array — the
+    one adapter consumers need to run unchanged on both data paths."""
+    if isinstance(data, MaskedWindow):
+        return data.data, data.n_valid
+    return data, data.shape[0]
+
+
+# ------------------------------------------------------- in-place grow kernel
+_APPEND_CACHE: dict[tuple, Callable] = {}
+
+
+def _append_kernel(buf_shape, rows_shape, dtype, sharding) -> Callable:
+    """Jitted ``dynamic_update_slice`` append, cached per (buffer shape,
+    rows shape).  The plane coalesces each expansion into one append, so
+    the cache holds one entry per distinct grow size — bounded by the
+    stage count, and shared across runs on the same schedule."""
+    key = (buf_shape, rows_shape, str(dtype), sharding)
+    if key in _APPEND_CACHE:
+        return _APPEND_CACHE[key]
+
+    def append(buf, rows, offset):
+        start = (offset,) + (jnp.int32(0),) * (buf.ndim - 1)
+        return jax.lax.dynamic_update_slice(buf, rows, start)
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    kw = {"out_shardings": sharding} if sharding is not None else {}
+    _APPEND_CACHE[key] = jax.jit(append, donate_argnums=donate, **kw)
+    return _APPEND_CACHE[key]
+
+
+@dataclasses.dataclass
+class DeviceWindow:
+    """Preallocated expanding window resident on the mesh.
+
+    ``sharding`` (a ``jax.sharding.NamedSharding`` over the data axes)
+    places the buffer; appends upload only the new rows and land them with
+    ``dynamic_update_slice``, so growing never re-uploads resident data.
+    ``growth`` mirrors the stage schedule and is validated like
+    ``BETSchedule.growth`` — a factor <= 1 would never fill the window.
+
+    View lifetime: on backends that honor buffer donation (non-CPU), an
+    ``append`` consumes the previous buffer in place, invalidating views
+    handed out earlier.  Take ``masked()``/``slice()`` views *after* the
+    stage's residency is settled and drop them before the next expansion —
+    the engine's acquire-then-view stage setup follows this order."""
+    capacity: int
+    item_shape: tuple
+    dtype: Any
+    growth: float = 2.0
+    sharding: Any = None
+    meter: DataAccessMeter | None = None
+    # multi-field planes (X, y) append the same example range to several
+    # windows; only one of them should count *examples* uploaded (bytes are
+    # genuinely per-field and always counted)
+    meter_examples: bool = True
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if not self.growth > 1.0:
+            raise ValueError(
+                f"DeviceWindow.growth must be > 1, got {self.growth}: the "
+                "window would never expand to its full capacity")
+        self.item_shape = tuple(self.item_shape)
+        shape = (self.capacity,) + self.item_shape
+        if self.sharding is not None:
+            # allocate straight into the sharded layout — a host zeros +
+            # device_put would commit the full unsharded buffer to one
+            # device first, double the peak footprint at capacity scale
+            self._buf = jax.jit(lambda: jnp.zeros(shape, self.dtype),
+                                out_shardings=self.sharding)()
+        else:
+            self._buf = jnp.zeros(shape, self.dtype)
+        self._n = 0
+        self._n_dev = jnp.int32(0)
+
+    # ---------------------------------------------------------------- state
+    @property
+    def n_valid(self) -> int:
+        return self._n
+
+    @property
+    def buffer(self):
+        return self._buf
+
+    @property
+    def full(self) -> bool:
+        return self._n >= self.capacity
+
+    def next_size(self) -> int:
+        """The schedule's next window: n_{t+1} = min(cap, ceil(g * n_t))."""
+        return min(self.capacity, int(math.ceil(max(1, self._n) * self.growth)))
+
+    # --------------------------------------------------------------- updates
+    def append(self, rows: np.ndarray) -> int:
+        """Upload ``rows`` and land them in place after the resident prefix.
+        Returns the new valid length."""
+        rows = np.asarray(rows)
+        if rows.shape[1:] != self.item_shape:
+            raise ValueError(
+                f"rows shape {rows.shape[1:]} != item shape {self.item_shape}")
+        k = int(rows.shape[0])
+        if self._n + k > self.capacity:
+            raise ValueError(
+                f"append of {k} rows overflows window "
+                f"({self._n}/{self.capacity} resident)")
+        kernel = _append_kernel(self._buf.shape, rows.shape, self._buf.dtype,
+                                self.sharding)
+        self._buf = kernel(self._buf, np.asarray(rows, self._buf.dtype),
+                           jnp.int32(self._n))
+        if self.meter is not None:
+            self.meter.record_upload(nbytes=rows.nbytes,
+                                     examples=k if self.meter_examples else 0)
+        self._n += k
+        self._n_dev = jnp.int32(self._n)
+        return self._n
+
+    # ----------------------------------------------------------------- views
+    def masked(self, n: int | None = None) -> MaskedWindow:
+        """Fixed-shape view exposing the first ``n`` (default: all resident)
+        examples through the valid-length mask."""
+        if n is None:
+            return MaskedWindow(self._buf, self._n_dev)
+        if n > self._n:
+            raise ValueError(f"window {n} exceeds resident prefix {self._n}")
+        return MaskedWindow(self._buf, jnp.int32(n))
+
+    def slice(self, n: int):
+        """Device-side prefix slice (the convex path's (X[:n], y[:n]))."""
+        if n > self._n:
+            raise ValueError(f"window {n} exceeds resident prefix {self._n}")
+        return self._buf[:n]

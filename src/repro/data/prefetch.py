@@ -1,0 +1,101 @@
+"""Background shard prefetching — the paper's load/compute overlap, for real.
+
+§3.3: while the optimizer runs stage t on the resident window, the shards
+for stage t+1 stream in concurrently.  ``Prefetcher`` realizes that with a
+small thread pool: the data plane *schedules* the next stage's shards when a
+stage begins, device computation proceeds, and when the expansion finally
+*takes* a shard the load has (ideally) already finished.  The demand-side
+wait is what the ``DataAccessMeter`` records as ``blocked_time_s`` — zero
+blocked time means the loads were fully hidden.
+
+A prefetcher serves one or more *field* stores in lockstep (e.g. the convex
+path's X and y): shard i is one unit covering the same example range in
+every store, so residency bookkeeping stays scalar.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Sequence
+
+import numpy as np
+
+from .shards import DataAccessMeter, ShardStore
+
+
+class Prefetcher:
+    """Asynchronous loader over parallel shard stores.
+
+    ``schedule`` / ``take`` are called from the driving thread only; worker
+    threads just execute loads.  Taking an unscheduled shard degrades to a
+    synchronous (fully blocked) demand load, so correctness never depends on
+    the prefetch horizon.
+
+    ``max_workers`` defaults to 1 — the paper's sequential-loading channel
+    (§4.2's rate ``a``), and what keeps ``DataAccessMeter.overlap_fraction``
+    honest: with one worker, load time can only hide behind *computation*.
+    More workers raise throughput but also let loads hide behind each
+    other, inflating the overlap metric with IO-IO parallelism."""
+
+    def __init__(self, stores: Sequence[ShardStore],
+                 meter: DataAccessMeter | None = None, *, max_workers: int = 1):
+        stores = tuple(stores)
+        if not stores:
+            raise ValueError("Prefetcher needs at least one store")
+        sizes = {(s.num_examples, s.shard_size) for s in stores}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"field stores disagree on (num_examples, shard_size): {sizes}")
+        self.stores = stores
+        self.meter = meter
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="bet-prefetch")
+        self._pending: dict[int, Future] = {}
+        self._closed = False
+
+    # ------------------------------------------------------------------ api
+    def schedule(self, shard_ids) -> None:
+        """Begin loading shards in the background (idempotent per shard)."""
+        self._check_open()
+        for i in shard_ids:
+            if i not in self._pending:
+                self._pending[i] = self._pool.submit(self._timed_load, i)
+
+    def take(self, shard: int) -> tuple[np.ndarray, ...]:
+        """Block until ``shard`` is loaded and return one array per store."""
+        self._check_open()
+        fut = self._pending.pop(shard, None)
+        prefetched = fut is not None
+        if fut is None:
+            fut = self._pool.submit(self._timed_load, shard)
+        t0 = time.perf_counter()
+        arrays, duration = fut.result()
+        blocked = time.perf_counter() - t0
+        if self.meter is not None:
+            self.meter.record_load(
+                nbytes=sum(a.nbytes for a in arrays),
+                examples=self.stores[0].examples_in(shard),
+                duration_s=duration, blocked_s=blocked, prefetched=prefetched)
+        return arrays
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._pool.shutdown(wait=True, cancel_futures=True)
+            self._pending.clear()
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- internals
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("Prefetcher is closed")
+
+    def _timed_load(self, shard: int):
+        t0 = time.perf_counter()
+        arrays = tuple(s.load(shard) for s in self.stores)
+        return arrays, time.perf_counter() - t0

@@ -1,15 +1,13 @@
-"""ExpandingWindow — BET's data-access primitive for the distributed LM path.
+"""ExpandingWindow — host-side compatibility shim over the streaming plane.
 
-The training corpus is pre-permuted and split into fixed-size *shards*
-(modelling files on NAS / host-local slices of a cloud dataset).  BET's
-contract (§3.3): the optimizer at stage t may touch only the first n_t
-examples of the permutation, every already-loaded shard is reused, and
-loading of the next shards overlaps with computation.
-
-``ExpandingWindow`` tracks which shards are resident per data-parallel host,
-exposes ``grow()`` (double the window = the Alg. 1 expansion), and accounts
-loading cost through the same SimulatedClock as the convex path, so the
-paper's time model applies end-to-end to the LM experiments.
+The real data plane now lives in ``shards.py`` / ``prefetch.py`` /
+``device_window.py`` / ``plane.py`` (``StreamingDataset``): sharded storage,
+async prefetch, and a device-resident window grown in place.  This class
+keeps the original host-side numpy API for the property tests, notebooks
+and anything that wants §3.3 semantics without a device: nested prefix
+windows of one permutation, ``grow()`` doubling, SimulatedClock charging —
+plus (new) real-read accounting through an optional ``DataAccessMeter`` so
+the legacy path reports the same Thm 4.1 counters as the plane.
 """
 from __future__ import annotations
 
@@ -18,6 +16,7 @@ import dataclasses
 import numpy as np
 
 from ..core.timemodel import SimulatedClock
+from .shards import DataAccessMeter
 
 
 @dataclasses.dataclass
@@ -30,11 +29,17 @@ class ExpandingWindow:
     n0: int
     growth: float = 2.0
     clock: SimulatedClock | None = None
+    meter: DataAccessMeter | None = None
 
     def __post_init__(self):
+        if not self.growth > 1.0:
+            raise ValueError(
+                f"ExpandingWindow.growth must be > 1, got {self.growth}: "
+                "grow() would loop forever without reaching the corpus")
         self.n_t = min(self.n0, len(self.tokens))
         if self.clock is not None:
             self.clock.wait_for(self.n_t)
+        self._record_load(self.n_t)
 
     @property
     def N(self) -> int:
@@ -47,8 +52,10 @@ class ExpandingWindow:
     def grow(self) -> int:
         """Expand the window (Alg. 1 line: n_{t+1} <- b * n_t)."""
         new_n = min(self.N, int(np.ceil(self.n_t * self.growth)))
-        if self.clock is not None and new_n > self.n_t:
-            self.clock.wait_for(new_n)     # loading overlaps; block if behind
+        if new_n > self.n_t:
+            if self.clock is not None:
+                self.clock.wait_for(new_n)  # loading overlaps; block if behind
+            self._record_load(new_n - self.n_t)    # only the new examples
         self.n_t = new_n
         return self.n_t
 
@@ -68,12 +75,34 @@ class ExpandingWindow:
         idx = (np.arange(batch_size) + step * batch_size) % n
         if self.clock is not None:
             self.clock.eval_pass(batch_size)
+        if self.meter is not None:
+            self.meter.record_access(batch_size)
         return self.tokens[idx]
 
     def host_shard(self, batch: np.ndarray, host: int, num_hosts: int):
-        """Per-host slice of a global batch (data-parallel loading)."""
-        per = len(batch) // num_hosts
+        """Per-host slice of a global batch (data-parallel loading).
+
+        Every host gets the same ``ceil(len/num_hosts)`` rows (SPMD lockstep
+        needs shape agreement across hosts), the slices cover the whole
+        batch, and the unpadded portions are disjoint.  When
+        ``len(batch) % num_hosts != 0`` the tail is padded by wrapping to
+        the batch start instead of silently dropping — only the last host's
+        pad rows duplicate examples."""
+        if not 0 <= host < num_hosts:
+            raise ValueError(f"host {host} not in [0, {num_hosts})")
+        per = -(-len(batch) // num_hosts)
+        if per * num_hosts != len(batch):
+            # cyclic tile (handles pad > len(batch), e.g. 2 rows, 5 hosts)
+            batch = np.resize(batch, (per * num_hosts,) + batch.shape[1:])
         return batch[host * per: (host + 1) * per]
+
+    def _record_load(self, examples: int) -> None:
+        if self.meter is not None and examples > 0:
+            row_bytes = self.tokens.dtype.itemsize * int(
+                np.prod(self.tokens.shape[1:], dtype=np.int64))
+            self.meter.record_load(nbytes=examples * row_bytes,
+                                   examples=examples, duration_s=0.0,
+                                   blocked_s=0.0, prefetched=False)
 
 
 def synth_corpus(n_seqs: int, seq_len: int, vocab: int, *,

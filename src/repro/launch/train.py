@@ -36,16 +36,21 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from .. import configs
 from ..core.engine import (BETSchedule, BetEngine, FixedSteps, NeverExpand,
                            TwoTrack)
 from ..core.timemodel import SimulatedClock
 from ..core.trace import Trace
+from ..data.device_window import window_rows
+from ..data.plane import StreamingDataset
+from ..data.shards import InMemoryShardStore
 from ..data.window import synth_corpus
 from ..models import transformer as T
 from ..optim.api import BatchOptimizer
 from . import steps
-from .mesh import make_host_mesh
+from .mesh import axis_size, dp_axes, make_host_mesh
 
 
 @dataclasses.dataclass
@@ -61,6 +66,9 @@ class TrainConfig:
     seed: int = 0
     max_stage_steps: int = 200      # two-track safety bound
     eval_rows: int = 64             # probe size for condition (3) / eval loss
+    use_plane: bool = True          # streaming data plane vs host-slice path
+    shard_size: int = 64            # corpus shard granularity (plane only)
+    prefetch_workers: int = 1   # one sequential load channel (§4.2's ``a``)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,9 +89,12 @@ class LMStepOptimizer(BatchOptimizer):
         return {"opt": self.init_opt(params), "t": jnp.int32(0)}
 
     def step(self, params, state, objective, data):
-        n = data.shape[0]
+        # ``data`` is either a host-path (n_t, L) slice or the plane's
+        # fixed-capacity MaskedWindow; the rotation only ever touches the
+        # valid prefix, so both paths gather identical rows.
+        toks, n = window_rows(data)
         idx = (jnp.arange(self.batch_size) + state["t"] * self.batch_size) % n
-        rows = jnp.take(data, idx, axis=0)
+        rows = jnp.take(toks, idx, axis=0)
         batch = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
         params, opt, metrics = self.train_step(params, state["opt"], batch)
         return params, {"opt": opt, "t": state["t"] + 1}, {"f": metrics["loss"]}
@@ -91,8 +102,9 @@ class LMStepOptimizer(BatchOptimizer):
 
 @dataclasses.dataclass
 class TokenWindows:
-    """Engine-facing view of a pre-permuted token corpus: nested prefix
-    windows of one permutation (§3.3's data-access contract)."""
+    """Host-slice view of a pre-permuted token corpus: nested prefix windows
+    of one permutation (§3.3's data-access contract).  The reference path
+    the streaming plane is held bit-exact against (``use_plane=False``)."""
     tokens: Any                    # (N, seq_len+1) int32, device
 
     @property
@@ -104,10 +116,18 @@ class TokenWindows:
 
 
 def make_lm_objective(cfg, eval_rows: int = 64):
-    """loss(params, token block) on a bounded probe prefix of the block."""
+    """loss(params, token block) on a fixed-size probe of the block.
+
+    The probe is always ``eval_rows`` rows rotating through the block's
+    valid prefix (``% n_valid``), so host-path slices and the plane's
+    fixed-capacity MaskedWindow compute the identical batch — windows
+    smaller than the probe wrap instead of shrinking it, keeping the
+    two-track condition (3) comparison at a constant sample size and the
+    two data paths bit-exact against each other."""
     def objective(params, toks):
-        k = min(eval_rows, toks.shape[0])
-        batch = {"tokens": toks[:k, :-1], "labels": toks[:k, 1:]}
+        rows, n = window_rows(toks)
+        probe = jnp.take(rows, jnp.arange(eval_rows) % n, axis=0)
+        batch = {"tokens": probe[:, :-1], "labels": probe[:, 1:]}
         return T.loss_fn(cfg, params, batch)[0]
     return objective
 
@@ -118,15 +138,31 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
     clock = clock or SimulatedClock(preloaded=tc.n0)
     corpus = synth_corpus(tc.corpus_size, tc.seq_len + 1,
                           max(2, cfg.vocab_size), seed=tc.seed)
-    tokens = jnp.asarray(corpus)
-    data = TokenWindows(tokens)
-    eval_tokens = tokens[:: max(1, len(corpus) // tc.eval_rows)][: tc.eval_rows]
+    # eval probe sliced on the host: the plane path must not ship the whole
+    # corpus to device just to build it — the DeviceWindow streams that
+    eval_np = corpus[:: max(1, len(corpus) // tc.eval_rows)][: tc.eval_rows]
+    eval_tokens = jnp.asarray(eval_np)
+    if tc.use_plane:
+        # the streaming plane: sharded corpus -> async prefetch -> a device
+        # window preallocated at corpus capacity, sharded over the mesh's
+        # data axes, grown in place at each expansion
+        dp = dp_axes(mesh)
+        batch_axes = dp if tc.corpus_size % axis_size(mesh, dp) == 0 else None
+        data = StreamingDataset(
+            [InMemoryShardStore(corpus, tc.shard_size)], masked=True,
+            shardings=NamedSharding(mesh, P(batch_axes, None)),
+            prefetch_workers=tc.prefetch_workers)
+    else:
+        data = TokenWindows(jnp.asarray(corpus))
 
     params = T.init_params(cfg, jax.random.key(tc.seed))
     optimizer = LMStepOptimizer(train_step=steps.make_train_step(cfg, lr=tc.lr),
                                 init_opt=steps.init_opt_state,
                                 batch_size=tc.batch_size)
-    objective = make_lm_objective(cfg, tc.eval_rows)
+    # clamp the probe to the eval set so a small eval block is an unweighted
+    # mean over distinct rows; stage windows below that size wrap instead,
+    # identically on both data paths
+    objective = make_lm_objective(cfg, min(tc.eval_rows, len(eval_np)))
 
     if tc.schedule == "batch":
         policy = NeverExpand(steps=tc.final_steps, eval_full=True)
@@ -143,10 +179,17 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
     engine = BetEngine(schedule=BETSchedule(n0=tc.n0),
                        step_cost=lambda n_t: tc.batch_size,
                        wait_on_expand=True, carry_state=True)
-    return engine.run(data, optimizer, objective, policy, w0=params,
-                      clock=clock, eval_data=eval_tokens,
-                      trace_name=f"lm_{tc.schedule}",
-                      meta={"arch": cfg.name}, progress=progress)
+    try:
+        trace = engine.run(data, optimizer, objective, policy, w0=params,
+                           clock=clock, eval_data=eval_tokens,
+                           trace_name=f"lm_{tc.schedule}",
+                           meta={"arch": cfg.name}, progress=progress)
+    finally:
+        if tc.use_plane:
+            data.close()
+    if tc.use_plane:
+        trace.meta["data_plane"] = data.meter.snapshot()
+    return trace
 
 
 def main() -> None:
@@ -177,6 +220,11 @@ def main() -> None:
     p = trace.final()
     print(f"done in {time.time()-t0:.1f}s wall; simulated time {p.time:.0f}, "
           f"accesses {p.accesses}, final eval loss {p.f_full:.4f}")
+    dp = trace.meta.get("data_plane")
+    if dp:
+        print(f"data plane: loaded {dp['examples_loaded']} examples "
+              f"({dp['bytes_loaded']} B) once, reuse x{dp['reuse_ratio']}, "
+              f"load/compute overlap {dp['overlap_fraction']:.2f}")
 
 
 if __name__ == "__main__":

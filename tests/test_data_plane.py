@@ -1,0 +1,246 @@
+"""Streaming data-plane invariants (tier1): shard storage round-trips,
+prefix-window monotonicity, bit-exact device windows vs host-path numpy
+slices, zero re-upload of resident data, no-retrace masked windows, real
+load/compute overlap, and DataAccessMeter totals matching Thm 4.1's
+accounting on the fig3 workload."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BETSchedule, BetEngine, FixedSteps, SimulatedClock
+from repro.data import (DataAccessMeter, DeviceWindow, ExpandingWindow,
+                        InMemoryShardStore, MemmapShardStore, StreamingDataset,
+                        ThrottledStore, synth_corpus, window_rows)
+from repro.data.synthetic import load
+from repro.models.linear import init_params, make_objective
+from repro.optim import NewtonCG
+
+pytestmark = pytest.mark.tier1
+
+
+# ------------------------------------------------------------------- storage
+def test_memmap_store_roundtrip(tmp_path):
+    corpus = synth_corpus(100, 8, 97, seed=3)
+    store = MemmapShardStore.write(corpus, str(tmp_path / "c"), shard_size=32)
+    reopened = MemmapShardStore(str(tmp_path / "c"))
+    assert reopened.num_shards == 4
+    assert reopened.examples_in(3) == 4          # partial tail, no padding
+    assert reopened.item_shape == (8,) and reopened.dtype == corpus.dtype
+    back = np.concatenate([reopened.load(i) for i in range(4)])
+    np.testing.assert_array_equal(back, corpus)
+    assert list(reopened.shards_covering(33)) == [0, 1]
+    assert list(reopened.shards_covering(0)) == []
+
+
+def test_in_memory_store_matches_memmap(tmp_path):
+    data = np.arange(40, dtype=np.float32).reshape(10, 4)
+    mem = InMemoryShardStore(data, 3)
+    disk = MemmapShardStore.write(data, str(tmp_path / "d"), 3)
+    for i in range(mem.num_shards):
+        np.testing.assert_array_equal(mem.load(i), disk.load(i))
+    assert mem.example_nbytes == 16
+
+
+# ----------------------------------------------------- device-window growth
+def test_device_window_prefix_monotone_and_bit_exact():
+    """Grown device windows are nested prefixes of the permutation and
+    bit-exact against host-side numpy slicing at every size."""
+    corpus = synth_corpus(64, 8, 97, seed=1)
+    with StreamingDataset.from_arrays(corpus, shard_size=16,
+                                      masked=True) as plane:
+        prev = 0
+        for n_t in (16, 24, 48, 64):
+            win = plane.window(n_t)
+            rows, n_valid = window_rows(win)
+            resident = np.asarray(rows)[: plane.resident]
+            np.testing.assert_array_equal(resident,
+                                          corpus[: plane.resident])
+            assert plane.resident >= n_t >= prev   # monotone expansion
+            prev = n_t
+        assert plane.resident == 64
+
+
+def test_convex_plane_views_match_numpy_slices():
+    X = np.random.default_rng(0).standard_normal((50, 6)).astype(np.float32)
+    y = np.sign(X[:, 0]).astype(np.float32)
+    with StreamingDataset.from_arrays((X, y), shard_size=13) as plane:
+        for n_t in (13, 26, 50):
+            Xv, yv = plane.window(n_t)
+            np.testing.assert_array_equal(np.asarray(Xv), X[:n_t])
+            np.testing.assert_array_equal(np.asarray(yv), y[:n_t])
+
+
+def test_grow_never_reuploads_resident_examples():
+    corpus = synth_corpus(64, 8, 97, seed=2)
+    row_bytes = corpus.dtype.itemsize * corpus.shape[1]
+    with StreamingDataset.from_arrays(corpus, shard_size=16,
+                                      masked=True) as plane:
+        plane.window(16)
+        assert plane.meter.bytes_uploaded == 16 * row_bytes
+        up0 = plane.meter.bytes_uploaded
+        plane.window(16)                        # same window: nothing moves
+        assert plane.meter.bytes_uploaded == up0
+        plane.window(32)                        # grow: only the new shard
+        assert plane.meter.bytes_uploaded - up0 == 16 * row_bytes
+        assert plane.meter.examples_loaded == 32     # each loaded once
+
+
+def test_masked_window_growth_never_retraces():
+    """The headline DeviceWindow property: a kernel consuming MaskedWindow
+    is traced once and reused across every expansion."""
+    corpus = synth_corpus(64, 8, 97, seed=4)
+    traces = []
+
+    @jax.jit
+    def kernel(win):
+        traces.append(1)                        # runs only while tracing
+        rows, n = window_rows(win)
+        idx = jnp.arange(4) % n
+        return jnp.sum(jnp.take(rows, idx, axis=0))
+
+    with StreamingDataset.from_arrays(corpus, shard_size=16,
+                                      masked=True) as plane:
+        outs = [kernel(plane.window(n_t)) for n_t in (16, 32, 64)]
+    assert len(traces) == 1
+    # the mask is honoured: each output reflects its own window's prefix
+    assert float(outs[0]) == corpus[:4].sum()
+
+
+def test_device_window_validates_construction():
+    with pytest.raises(ValueError):
+        DeviceWindow(capacity=8, item_shape=(4,), dtype=np.float32,
+                     growth=1.0)
+    with pytest.raises(ValueError):
+        DeviceWindow(capacity=0, item_shape=(4,), dtype=np.float32)
+    win = DeviceWindow(capacity=8, item_shape=(2,), dtype=np.float32)
+    win.append(np.ones((8, 2), np.float32))
+    with pytest.raises(ValueError):
+        win.append(np.ones((1, 2), np.float32))  # overflow
+    with pytest.raises(ValueError):
+        win.slice(9)                             # beyond resident prefix
+
+
+# ------------------------------------------------------------------ prefetch
+def test_prefetch_overlaps_loads_with_compute():
+    """With a throttled store and compute between expansions, the next
+    stage's loads hide behind the stage — the §3.3 overlap, measured."""
+    corpus = synth_corpus(128, 8, 97, seed=5)
+    store = ThrottledStore(InMemoryShardStore(corpus, 32), delay_s=0.02)
+    with StreamingDataset([store], masked=True) as plane:
+        for n_t, n_next in ((32, 64), (64, 128), (128, None)):
+            plane.begin_stage(n_t, n_next)
+            time.sleep(0.15)                    # the stage's "compute"
+        m = plane.meter
+    assert m.examples_loaded == 128
+    assert m.prefetched_loads >= 3              # everything past stage 0
+    # compute (0.15s/stage) dwarfs the throttled reads (0.02s/shard), so
+    # most load time hides behind it even on a contended CI machine; only
+    # the cold first shard must block
+    assert m.overlap_fraction >= 0.5
+    assert m.blocked_time_s < m.load_time_s
+
+
+# ------------------------------------------- engine on the plane (fig3 load)
+def test_engine_on_plane_bit_exact_and_thm41_accounting():
+    """BetEngine driven by the streaming plane on the fig3 workload:
+    trajectories bit-exact vs the host-slice Dataset path, every example
+    loaded from storage exactly once, and the meter's access totals equal
+    the simulated clock's Thm 4.1 charges."""
+    ds = load("webspam_like", scale=0.0625)      # fig3 problem, CI scale
+    obj = make_objective("squared_hinge", lam=1e-3)
+    w0 = init_params(ds.d)
+    opt = NewtonCG(hessian_fraction=1.0)
+    engine = BetEngine(schedule=BETSchedule(n0=128))
+    policy_kw = dict(inner_steps=3, final_steps=6)
+    eval_data = (ds.X, ds.y)
+
+    tr_host = engine.run(ds, opt, obj, FixedSteps(**policy_kw), w0=w0,
+                         clock=SimulatedClock(), eval_data=eval_data)
+    clock = SimulatedClock()
+    with StreamingDataset.from_arrays(
+            (np.asarray(ds.X), np.asarray(ds.y)), shard_size=128) as plane:
+        tr_plane = engine.run(plane, opt, obj, FixedSteps(**policy_kw),
+                              w0=w0, clock=clock, eval_data=eval_data)
+        meter = plane.meter
+
+    np.testing.assert_array_equal(tr_host.column("f_window"),
+                                  tr_plane.column("f_window"))
+    np.testing.assert_array_equal(tr_host.column("f_full"),
+                                  tr_plane.column("f_full"))
+    assert [(p.stage, p.window) for p in tr_host.points] == \
+           [(p.stage, p.window) for p in tr_plane.points]
+    # Thm 4.1: O(N) unique loads, O(kappa_hat * N) optimizer accesses
+    assert meter.examples_loaded == ds.n
+    assert meter.examples_uploaded == ds.n   # X+y fields count examples once
+    assert meter.examples_accessed == clock.data_accesses
+    k_hat, final = policy_kw["inner_steps"], policy_kw["final_steps"]
+    assert meter.examples_accessed <= (2 * k_hat + final + 2) * ds.n
+    assert meter.reuse_ratio > 1.0
+
+
+def test_lm_plane_bit_exact_vs_host_path():
+    """The LM path's fixed-shape MaskedWindow pipeline reproduces the
+    host-slice TokenWindows trajectory exactly."""
+    from repro import configs
+    from repro.launch.train import TrainConfig, train_lm
+
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    kw = dict(schedule="bet", inner_steps=2, final_steps=3, batch_size=4,
+              seq_len=32, n0=16, corpus_size=64, shard_size=16)
+    tr_plane = train_lm(cfg, TrainConfig(use_plane=True, **kw))
+    tr_host = train_lm(cfg, TrainConfig(use_plane=False, **kw))
+    np.testing.assert_array_equal(tr_plane.column("f_window"),
+                                  tr_host.column("f_window"))
+    np.testing.assert_array_equal(tr_plane.column("f_full"),
+                                  tr_host.column("f_full"))
+    dp = tr_plane.meta["data_plane"]
+    assert dp["examples_loaded"] == 64          # whole corpus, once each
+
+
+# --------------------------------------------------- ExpandingWindow shim
+def test_expanding_window_rejects_non_expanding_growth():
+    corpus = synth_corpus(32, 8, 97)
+    with pytest.raises(ValueError):
+        ExpandingWindow(corpus, 8, growth=1.0)
+    with pytest.raises(ValueError):
+        ExpandingWindow(corpus, 8, growth=0.5)
+    assert ExpandingWindow(corpus, 8, growth=1.0 + 1e-6).n_t == 8
+
+
+def test_expanding_window_meter_counts_unique_loads():
+    corpus = synth_corpus(40, 8, 97)
+    meter = DataAccessMeter()
+    w = ExpandingWindow(corpus, 10, meter=meter)
+    assert meter.examples_loaded == 10
+    while not w.full:
+        w.grow()
+    assert meter.examples_loaded == 40          # each example once
+    w.sample_batch(4, 0)
+    assert meter.examples_accessed == 4
+
+
+def test_host_shard_disjoint_covering_slices():
+    corpus = synth_corpus(16, 4, 97)
+    w = ExpandingWindow(corpus, 16)
+    batch = w.window()
+
+    for num_hosts in (2, 3, 5):                 # divisible and ragged
+        shards = [w.host_shard(batch, h, num_hosts) for h in range(num_hosts)]
+        # SPMD lockstep: every host sees the same shape
+        per = -(-len(batch) // num_hosts)
+        assert all(len(s) == per for s in shards)
+        # disjoint covering: the unpadded prefix reassembles the batch
+        # exactly (no tail dropped, no overlap before the wrap-pad)
+        np.testing.assert_array_equal(
+            np.concatenate(shards)[: len(batch)], batch)
+    np.testing.assert_array_equal(w.host_shard(batch, 0, 2), batch[:8])
+    # pad exceeding the batch (2 rows over 5 hosts) still tiles cyclically
+    tiny = batch[:2]
+    tiny_shards = [w.host_shard(tiny, h, 5) for h in range(5)]
+    assert all(len(s) == 1 for s in tiny_shards)
+    np.testing.assert_array_equal(np.concatenate(tiny_shards)[:2], tiny)
+    with pytest.raises(ValueError):
+        w.host_shard(batch, 2, 2)
