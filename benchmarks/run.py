@@ -6,9 +6,15 @@
 
 Each module reproduces one paper artifact (see DESIGN.md §8) on synthetic
 scale-matched datasets and emits machine-checkable claim lines.  The
-roofline module aggregates the dry-run artifacts (deliverable g)."""
+roofline module aggregates the dry-run artifacts (deliverable g).
+
+The ``bench_*`` modules additionally emit a JSON report; the harness pins
+each one's ``--out`` to ``BENCH_<name>.json`` at the repo root (bench_engine
+→ BENCH_engine.json, …) so the perf trajectory is tracked file-to-file
+across PRs instead of only scrolling past on stdout."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -16,7 +22,14 @@ import traceback
 MODULES = ["fig2_simulated_runtime", "fig3_wallclock", "fig4_hw_accel",
            "fig5_parallel", "fig6_test_acc", "fig7_inner_opt",
            "fig8_dsm_theta", "table1_time_model", "thm41_data_access",
-           "ablation_schedule", "bench_engine", "bench_data", "roofline"]
+           "ablation_schedule", "bench_engine", "bench_data", "bench_dist",
+           "roofline"]
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bench_json_path(name: str) -> str:
+    return os.path.join(REPO_ROOT, f"BENCH_{name[len('bench_'):]}.json")
 
 
 def main() -> None:
@@ -27,6 +40,11 @@ def main() -> None:
         if which and not any(name.startswith(w) for w in which):
             continue
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        argv = sys.argv
+        if name.startswith("bench_") and "--out" not in argv:
+            # pin the JSON artifact path; user flags (and an explicit
+            # --out) still flow through parse_known_args untouched
+            sys.argv = argv + ["--out", _bench_json_path(name)]
         t0 = time.time()
         try:
             mod.main()
@@ -37,6 +55,8 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name}/__wall__,{(time.time()-t0)*1e6:.0f},FAILED",
                   flush=True)
+        finally:
+            sys.argv = argv
     if failures:
         raise SystemExit(f"{failures} benchmark module(s) failed")
 

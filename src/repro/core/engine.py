@@ -523,6 +523,12 @@ class BetEngine:
         policy.stage_end(info, rec)
         return w, state
 
+    def _collect_host_records(self, ctx, info: StageInfo) -> None:
+        """Once-per-stage flush hook, called right before the trace lands.
+        The multi-host runtime (dist/runtime.DistributedBetEngine) overrides
+        this to all-gather per-host stage records through its communicator;
+        the single-host engine records nothing extra."""
+
     def _flush_stage(self, ctx, policy, info: StageInfo, rec: StageRecords,
                      *, extra_base=None, eval_charge: int = 0):
         """Replay the §4.2 clock charges for the stage's inner steps and land
@@ -531,6 +537,7 @@ class BetEngine:
         ``eval_charge`` > 0 bills one eval pass of that many points after
         each chunk — the variance-trigger probe (charged like DSM's norm
         test and TwoTrack's condition eval; measurement f̂ evals stay free)."""
+        self._collect_host_records(ctx, info)
         clock, cost, trace = ctx["clock"], ctx["cost"], ctx["trace"]
         fs, ffull = rec.f_window(), rec.f_full()
         n = len(fs)
@@ -610,6 +617,7 @@ class BetEngine:
             rec.f_fast_on_t = pulled["f_fast"][:s]
             rec.triggered = bool(pulled["triggered"])
             assert policy.should_expand(info, rec)
+            self._collect_host_records(ctx, info)
             # replay the per-step clock charges: slow update, fast update,
             # condition evaluation (charged per the paper unless disabled)
             times = np.empty(s)

@@ -2,6 +2,7 @@ from .synthetic import Dataset, load, make_classification, PAPER_LIKE
 from .window import ExpandingWindow, synth_corpus
 from .shards import (DataAccessMeter, InMemoryShardStore, MemmapShardStore,
                      ShardStore, ThrottledStore)
-from .prefetch import Prefetcher
-from .device_window import DeviceWindow, MaskedWindow, window_rows
+from .prefetch import Prefetcher, ShardLoadError
+from .device_window import (DeviceWindow, HostWindows, MaskedWindow,
+                            StackedDeviceWindow, WindowLane, window_rows)
 from .plane import StreamingDataset

@@ -60,22 +60,66 @@ def window_rows(data):
     return data, data.shape[0]
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HostWindows:
+    """Stacked per-host masked windows — the SPMD view of the distributed
+    expanding window (dist/runtime.py).
+
+    ``fields`` is one ``(num_hosts, capacity, *item)`` array per data field
+    (the convex path's X and y, the LM path's tokens); lane ``h`` holds host
+    ``h``'s *owned* examples in its local, prefix-nested order.  ``counts``
+    is the ``(num_hosts,)`` int32 vector of per-host valid lengths — hosts
+    may disagree because shard-granularity padding differs per lane, which is
+    why every consumer reduces through a mask (dist/collectives.py) instead
+    of slicing.  Like ``MaskedWindow``, expansion changes only ``counts``,
+    so jitted stage kernels never re-trace across stages."""
+    fields: tuple
+    counts: Any                 # (num_hosts,) int32
+
+    def tree_flatten(self):
+        return ((tuple(self.fields), self.counts), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fields, counts = children
+        return cls(tuple(fields), counts)
+
+    @property
+    def num_hosts(self) -> int:
+        return self.fields[0].shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.fields[0].shape[1]
+
+
 # ------------------------------------------------------- in-place grow kernel
 _APPEND_CACHE: dict[tuple, Callable] = {}
 
 
-def _append_kernel(buf_shape, rows_shape, dtype, sharding) -> Callable:
+def _append_kernel(buf_shape, rows_shape, dtype, sharding, *,
+                   lane: bool = False) -> Callable:
     """Jitted ``dynamic_update_slice`` append, cached per (buffer shape,
     rows shape).  The plane coalesces each expansion into one append, so
     the cache holds one entry per distinct grow size — bounded by the
-    stage count, and shared across runs on the same schedule."""
-    key = (buf_shape, rows_shape, str(dtype), sharding)
+    stage count, and shared across runs on the same schedule.
+
+    ``lane=True`` is the multi-host variant: the buffer carries a leading
+    hosts axis and rows land in lane ``host`` at ``offset``."""
+    key = ("lane" if lane else "row", buf_shape, rows_shape, str(dtype),
+           sharding)
     if key in _APPEND_CACHE:
         return _APPEND_CACHE[key]
 
-    def append(buf, rows, offset):
-        start = (offset,) + (jnp.int32(0),) * (buf.ndim - 1)
-        return jax.lax.dynamic_update_slice(buf, rows, start)
+    if lane:
+        def append(buf, rows, host, offset):
+            start = (host, offset) + (jnp.int32(0),) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, rows[None], start)
+    else:
+        def append(buf, rows, offset):
+            start = (offset,) + (jnp.int32(0),) * (buf.ndim - 1)
+            return jax.lax.dynamic_update_slice(buf, rows, start)
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
     kw = {"out_shardings": sharding} if sharding is not None else {}
@@ -185,3 +229,119 @@ class DeviceWindow:
         if n > self._n:
             raise ValueError(f"window {n} exceeds resident prefix {self._n}")
         return self._buf[:n]
+
+
+# --------------------------------------------------- multi-host stacked window
+@dataclasses.dataclass
+class StackedDeviceWindow:
+    """The multi-host DeviceWindow: one ``(num_hosts, capacity, *item)``
+    buffer whose lane ``h`` is host ``h``'s expanding window, grown in place
+    per lane via ``dynamic_update_slice``.
+
+    With ``sharding = P('hosts', ...)`` over a hosts mesh, lane ``h`` lives
+    on host ``h``'s device, so an append from host ``h`` only writes its own
+    shard and resident lanes are never re-uploaded.  This is the
+    single-process SPMD *simulation* of the runtime: a real multi-process
+    deployment allocates only its local lane and the stacked axis exists
+    logically through the named mesh axis (dist/collectives.AxisCollectives).
+
+    ``meters`` is an optional per-host ``DataAccessMeter`` sequence — lane
+    appends charge the owning host's meter, which is what keeps per-host
+    upload accounting separable in the global Thm 4.1 reduction."""
+    num_hosts: int
+    capacity: int
+    item_shape: tuple
+    dtype: Any
+    growth: float = 2.0
+    sharding: Any = None
+    meters: Any = None
+    meter_examples: bool = True
+
+    def __post_init__(self):
+        if self.num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {self.num_hosts}")
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if not self.growth > 1.0:
+            raise ValueError(
+                f"StackedDeviceWindow.growth must be > 1, got {self.growth}")
+        if self.meters is not None and len(self.meters) != self.num_hosts:
+            raise ValueError(f"{len(self.meters)} meters for "
+                             f"{self.num_hosts} hosts")
+        self.item_shape = tuple(self.item_shape)
+        shape = (self.num_hosts, self.capacity) + self.item_shape
+        if self.sharding is not None:
+            self._buf = jax.jit(lambda: jnp.zeros(shape, self.dtype),
+                                out_shardings=self.sharding)()
+        else:
+            self._buf = jnp.zeros(shape, self.dtype)
+        self._n = [0] * self.num_hosts
+
+    @property
+    def buffer(self):
+        return self._buf
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.asarray(self._n, np.int32)
+
+    def lane_valid(self, host: int) -> int:
+        return self._n[host]
+
+    def next_size(self, host: int) -> int:
+        """Lane ``host``'s next scheduled window size."""
+        return min(self.capacity,
+                   int(math.ceil(max(1, self._n[host]) * self.growth)))
+
+    def append(self, host: int, rows: np.ndarray) -> int:
+        """Upload ``rows`` into lane ``host`` after its resident prefix."""
+        if not 0 <= host < self.num_hosts:
+            raise IndexError(host)
+        rows = np.asarray(rows)
+        if rows.shape[1:] != self.item_shape:
+            raise ValueError(
+                f"rows shape {rows.shape[1:]} != item shape {self.item_shape}")
+        k = int(rows.shape[0])
+        if self._n[host] + k > self.capacity:
+            raise ValueError(
+                f"append of {k} rows overflows lane {host} "
+                f"({self._n[host]}/{self.capacity} resident)")
+        kernel = _append_kernel(self._buf.shape, rows.shape,
+                                self._buf.dtype, self.sharding, lane=True)
+        self._buf = kernel(self._buf, np.asarray(rows, self._buf.dtype),
+                           jnp.int32(host), jnp.int32(self._n[host]))
+        if self.meters is not None:
+            self.meters[host].record_upload(
+                nbytes=rows.nbytes, examples=k if self.meter_examples else 0)
+        self._n[host] += k
+        return self._n[host]
+
+    def lane(self, host: int) -> "WindowLane":
+        return WindowLane(self, host)
+
+
+class WindowLane:
+    """One host's view of a ``StackedDeviceWindow``, quacking like a
+    ``DeviceWindow`` for the streaming plane's residency bookkeeping — this
+    is what lets ``DistributedDataset`` drive one ``StreamingDataset`` per
+    host while all lanes share the single stacked SPMD buffer."""
+
+    def __init__(self, stacked: StackedDeviceWindow, host: int):
+        if not 0 <= host < stacked.num_hosts:
+            raise IndexError(host)
+        self._stacked = stacked
+        self.host = host
+
+    @property
+    def n_valid(self) -> int:
+        return self._stacked.lane_valid(self.host)
+
+    @property
+    def buffer(self):
+        return self._stacked.buffer
+
+    def next_size(self) -> int:
+        return self._stacked.next_size(self.host)
+
+    def append(self, rows: np.ndarray) -> int:
+        return self._stacked.append(self.host, rows)

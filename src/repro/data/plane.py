@@ -45,7 +45,8 @@ class StreamingDataset:
 
     def __init__(self, stores: Sequence[ShardStore], *, masked: bool = False,
                  shardings=None, meter: DataAccessMeter | None = None,
-                 growth: float = 2.0, prefetch_workers: int = 1):
+                 growth: float = 2.0, prefetch_workers: int = 1,
+                 windows: Sequence | None = None):
         stores = tuple(stores)
         if masked and len(stores) != 1:
             raise ValueError("masked mode serves a single field store")
@@ -54,6 +55,17 @@ class StreamingDataset:
         self.meter = meter if meter is not None else DataAccessMeter()
         self.prefetcher = Prefetcher(stores, self.meter,
                                      max_workers=prefetch_workers)
+        if windows is not None:
+            # caller-supplied windows (the multi-host runtime hands each
+            # host's plane a WindowLane of the shared StackedDeviceWindow);
+            # they own their upload metering, so none is wired here
+            windows = tuple(windows)
+            if len(windows) != len(stores):
+                raise ValueError(
+                    f"{len(windows)} windows for {len(stores)} field stores")
+            self.windows = windows
+            self._next_shard = 0
+            return
         if isinstance(shardings, (tuple, list)) and \
                 len(shardings) != len(stores):
             raise ValueError(
@@ -111,13 +123,21 @@ class StreamingDataset:
         # take, so cold starts pipeline across the worker pool too
         self.prefetcher.schedule(range(self._next_shard, need))
         chunks = [[] for _ in self.stores]
-        while self._next_shard < need:
-            arrays = self.prefetcher.take(self._next_shard)
-            for acc, rows in zip(chunks, arrays):
-                acc.append(rows)
-            self._next_shard += 1
-        for win, acc in zip(self.windows, chunks):
-            win.append(acc[0] if len(acc) == 1 else np.concatenate(acc))
+        try:
+            while self._next_shard < need:
+                arrays = self.prefetcher.take(self._next_shard)
+                for acc, rows in zip(chunks, arrays):
+                    acc.append(rows)
+                self._next_shard += 1
+        finally:
+            # land whatever was taken even when a later take raises
+            # (ShardLoadError mid-expansion): _next_shard must never run
+            # ahead of appended rows, or a retried call would append later
+            # shards at the failed shards' window offsets
+            for win, acc in zip(self.windows, chunks):
+                if acc:
+                    win.append(acc[0] if len(acc) == 1
+                               else np.concatenate(acc))
         return self.resident
 
     def prefetch(self, n: int) -> None:

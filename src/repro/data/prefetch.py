@@ -11,16 +11,31 @@ blocked time means the loads were fully hidden.
 A prefetcher serves one or more *field* stores in lockstep (e.g. the convex
 path's X and y): shard i is one unit covering the same example range in
 every store, so residency bookkeeping stays scalar.
+
+Failure contract: a background load that raises does **not** stay hidden
+until its own ``take`` — every subsequent ``schedule``/``take`` call first
+sweeps completed futures and re-raises the failure as ``ShardLoadError``
+(original exception chained), so the driving thread learns about a dead
+storage path at the next stage boundary instead of one expansion later.
 """
 from __future__ import annotations
 
+import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from typing import Sequence
 
 import numpy as np
 
 from .shards import DataAccessMeter, ShardStore
+
+
+class ShardLoadError(RuntimeError):
+    """A background shard load failed; the original exception is chained."""
+
+    def __init__(self, shard: int, cause: BaseException):
+        super().__init__(f"shard {shard} failed to load: {cause!r}")
+        self.shard = shard
 
 
 class Prefetcher:
@@ -35,7 +50,14 @@ class Prefetcher:
     (§4.2's rate ``a``), and what keeps ``DataAccessMeter.overlap_fraction``
     honest: with one worker, load time can only hide behind *computation*.
     More workers raise throughput but also let loads hide behind each
-    other, inflating the overlap metric with IO-IO parallelism."""
+    other, inflating the overlap metric with IO-IO parallelism.
+
+    ``close`` is idempotent and safe against a concurrent ``schedule`` (the
+    teardown race when an engine thread is still prefetching while the owner
+    shuts the plane down): whichever side takes the lock second wins nothing
+    — a post-close ``schedule`` is a silent no-op, and only a post-close
+    ``take`` raises, because dropping a demand load is a correctness error
+    while dropping a prefetch hint is not."""
 
     def __init__(self, stores: Sequence[ShardStore],
                  meter: DataAccessMeter | None = None, *, max_workers: int = 1):
@@ -51,25 +73,43 @@ class Prefetcher:
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="bet-prefetch")
         self._pending: dict[int, Future] = {}
+        self._lock = threading.Lock()
         self._closed = False
 
     # ------------------------------------------------------------------ api
     def schedule(self, shard_ids) -> None:
-        """Begin loading shards in the background (idempotent per shard)."""
-        self._check_open()
-        for i in shard_ids:
-            if i not in self._pending:
-                self._pending[i] = self._pool.submit(self._timed_load, i)
+        """Begin loading shards in the background (idempotent per shard).
+        No-op after ``close``; raises ``ShardLoadError`` eagerly if any
+        previously scheduled load has already failed."""
+        with self._lock:
+            if self._closed:
+                return
+            self._sweep_failures_locked()
+            for i in shard_ids:
+                if i not in self._pending:
+                    self._pending[i] = self._pool.submit(self._timed_load, i)
 
     def take(self, shard: int) -> tuple[np.ndarray, ...]:
         """Block until ``shard`` is loaded and return one array per store."""
-        self._check_open()
-        fut = self._pending.pop(shard, None)
-        prefetched = fut is not None
-        if fut is None:
-            fut = self._pool.submit(self._timed_load, shard)
+        with self._lock:
+            self._check_open()
+            self._sweep_failures_locked()
+            fut = self._pending.pop(shard, None)
+            prefetched = fut is not None
+            if fut is None:
+                fut = self._pool.submit(self._timed_load, shard)
         t0 = time.perf_counter()
-        arrays, duration = fut.result()
+        try:
+            arrays, duration = fut.result()
+        except CancelledError:
+            # a close() racing this take cancelled the queued load —
+            # CancelledError is a BaseException, so name the race instead
+            # of letting it escape raw (the documented post-close contract)
+            raise RuntimeError(
+                f"Prefetcher closed while shard {shard} was in flight") \
+                from None
+        except Exception as exc:
+            raise ShardLoadError(shard, exc) from exc
         blocked = time.perf_counter() - t0
         if self.meter is not None:
             self.meter.record_load(
@@ -79,10 +119,17 @@ class Prefetcher:
         return arrays
 
     def close(self) -> None:
-        if not self._closed:
+        with self._lock:
+            if self._closed:
+                return
             self._closed = True
-            self._pool.shutdown(wait=True, cancel_futures=True)
+            pending = dict(self._pending)
             self._pending.clear()
+        # shut down outside the lock: workers may take a while to drain and
+        # a racing schedule()/take() must not block on them
+        for fut in pending.values():
+            fut.cancel()
+        self._pool.shutdown(wait=True, cancel_futures=True)
 
     def __enter__(self) -> "Prefetcher":
         return self
@@ -94,6 +141,16 @@ class Prefetcher:
     def _check_open(self) -> None:
         if self._closed:
             raise RuntimeError("Prefetcher is closed")
+
+    def _sweep_failures_locked(self) -> None:
+        """Surface any already-failed background load now (caller holds the
+        lock).  The failed future is dropped so a retry can be rescheduled."""
+        for i, fut in list(self._pending.items()):
+            if fut.done() and not fut.cancelled():
+                exc = fut.exception()
+                if exc is not None:
+                    del self._pending[i]
+                    raise ShardLoadError(i, exc) from exc
 
     def _timed_load(self, shard: int):
         t0 = time.perf_counter()

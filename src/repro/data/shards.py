@@ -97,6 +97,18 @@ class DataAccessMeter:
         d["reuse_ratio"] = round(self.reuse_ratio, 2)
         return d
 
+    @classmethod
+    def combined(cls, meters) -> "DataAccessMeter":
+        """Sum counters across meters — the multi-host runtime reduces one
+        per-host meter per plane (plus a global access meter) into the
+        global Thm 4.1 accounting this way."""
+        total = cls()
+        for m in meters:
+            for f in dataclasses.fields(cls):
+                setattr(total, f.name,
+                        getattr(total, f.name) + getattr(m, f.name))
+        return total
+
 
 # ------------------------------------------------------------------- stores
 class ShardStore:

@@ -1,0 +1,12 @@
+# The multi-host BET runtime (PR 3): host topology, shard ownership,
+# SPMD collectives, and the distributed engine/data plane.  The paper's
+# distributed claim (§3.3, Fig. 5) — workers keep resident data and stream
+# only their share of each expansion — realized over the PR 1 engine and
+# PR 2 streaming plane.
+from .topology import (HostTopology, ProcessTopology, SimulatedTopology,
+                       force_host_device_flag)
+from .ownership import OwnedShardStore, ShardOwnership
+from .collectives import (AxisCollectives, Collectives, StackedCollectives,
+                          distributed_objective, l2_regularizer,
+                          masked_partial_sum, probe_rows, rotation_batch)
+from .runtime import DistributedBetEngine, DistributedDataset

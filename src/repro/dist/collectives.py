@@ -1,0 +1,164 @@
+"""SPMD collectives: the global objective as a psum of per-host partials,
+and the once-per-stage record flush as an all-gather.
+
+The distributed objective is written once, against a tiny communicator
+protocol, and runs under two implementations:
+
+  * ``StackedCollectives`` (simulated, default) — per-host values carry a
+    leading hosts axis inside one process (``HostWindows``); ``map_hosts``
+    is ``vmap``, ``psum`` is a sum over that axis, and the stage-record
+    all-gather is the identity (every logical host's records are already
+    local).  This is what CPU CI exercises.
+
+  * ``AxisCollectives(axis)`` — real SPMD: the same per-host code runs
+    unreplicated under a named mesh axis (``shard_map``) or one process per
+    host; ``psum`` is ``lax.psum`` and records go through
+    ``multihost_utils.process_allgather``.
+
+Either way the global regularized objective over the stage window is
+
+    f̂_t(w) = psum_h Σ_{i < m_h} ℓ(w; x_{h,i}) / psum_h m_h + reg(w)
+
+— per-host **masked** partial sums plus valid counts, because lanes are
+padded to a common capacity and per-host ``m_h`` differ by shard-granularity
+padding.  ``jax.grad`` of this is the data-parallel gradient: psum of
+per-host partial gradient sums over the same mask.  Nothing here ever syncs
+per step on the host; the only host transfer remains the engine's
+once-per-stage flush."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..data.device_window import HostWindows
+
+
+# ------------------------------------------------------------- communicators
+class Collectives:
+    """How per-host SPMD code maps and reduces across hosts."""
+
+    def map_hosts(self, fn: Callable, *args):
+        """Run ``fn`` per host.  Stacked: vmap over the hosts axis; real
+        SPMD: identity (the caller is already one host's program)."""
+        raise NotImplementedError
+
+    def psum(self, x):
+        raise NotImplementedError
+
+    def all_gather_records(self, records: list) -> list:
+        """Once-per-stage flush of host-side record dicts: every host ends
+        up with all hosts' records."""
+        raise NotImplementedError
+
+
+class StackedCollectives(Collectives):
+    """Simulated multi-host: hosts are the leading axis of stacked arrays
+    in one process."""
+
+    def map_hosts(self, fn, *args):
+        return jax.vmap(fn)(*args)
+
+    def psum(self, x):
+        return jnp.sum(x, axis=0)
+
+    def all_gather_records(self, records):
+        return list(records)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCollectives(Collectives):
+    """Real SPMD over a named mesh axis / one process per host."""
+    axis: str = "hosts"
+
+    def map_hosts(self, fn, *args):
+        return fn(*args)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis)
+
+    def all_gather_records(self, records):
+        from jax.experimental import multihost_utils
+        gathered = multihost_utils.process_allgather(records)
+        return list(gathered)
+
+
+# --------------------------------------------------------- global objective
+def masked_partial_sum(example_losses: Callable, w, fields, count):
+    """One host's contribution: Σ_{i<count} ℓ_i over its padded lane."""
+    losses = example_losses(w, fields)
+    mask = jnp.arange(losses.shape[0]) < count
+    return jnp.sum(jnp.where(mask, losses.astype(jnp.float32), 0.0))
+
+
+def distributed_objective(example_losses: Callable, *,
+                          regularizer: Callable | None = None,
+                          comm: Collectives | None = None) -> Callable:
+    """The global objective over ``HostWindows``.
+
+    ``example_losses(w, fields) -> (rows,) per-example losses`` is the
+    single-host per-example loss applied to one host's lane (e.g.
+    ``models.linear.make_example_losses``).  On plain (non-``HostWindows``)
+    data the objective degrades to the ordinary single-host mean, so the
+    same callable also serves host-resident eval sets.
+
+    Note the stated fp caveat: psum re-associates the per-example reduction
+    (per-host partial sums instead of one flat mean), so distributed values
+    agree with the single-host objective only to float32 rounding."""
+    comm = comm or StackedCollectives()
+
+    def objective(w, data):
+        if isinstance(data, HostWindows):
+            fields = data.fields if len(data.fields) > 1 else data.fields[0]
+            partials = comm.map_hosts(
+                lambda f, m: masked_partial_sum(example_losses, w, f, m),
+                fields, data.counts)
+            total = comm.psum(partials)
+            n = comm.psum(data.counts).astype(jnp.float32)
+            f = total / jnp.maximum(n, 1.0)
+        else:
+            f = jnp.mean(example_losses(w, data))
+        return f + (regularizer(w) if regularizer is not None else 0.0)
+
+    return objective
+
+
+def l2_regularizer(lam: float) -> Callable:
+    return lambda w: 0.5 * lam * jnp.sum(w * w)
+
+
+# -------------------------------------------------------------- LM gathers
+def rotation_batch(hw: HostWindows, per_host: int, t):
+    """The LM inner step's global mini-batch under data parallelism: each
+    host contributes ``per_host`` rows rotating through *its own* resident
+    lane (sequential epochs over loaded data — no random disk access), and
+    the global batch is their concatenation.  Batches are deliberately not
+    resampled i.i.d. from the global window — the paper's point is exactly
+    that workers keep serving from what they hold.
+
+    Precondition: every lane is non-empty (``counts >= 1``).  An empty lane
+    would silently serve its zero padding — callers must keep windows at or
+    above ``ShardOwnership.min_full_participation_window()`` (the LM driver
+    validates this at setup; a traced count cannot raise here)."""
+    def one(rows, m):
+        idx = (jnp.arange(per_host) + t * per_host) % m
+        return jnp.take(rows, idx, axis=0)
+
+    picked = jax.vmap(one)(hw.fields[0], hw.counts)     # (H, per_host, ...)
+    return picked.reshape((-1,) + picked.shape[2:])
+
+
+def probe_rows(hw: HostWindows, rows: int):
+    """A deterministic ``rows``-row probe for measurement objectives: an
+    equal per-host share of each lane's valid prefix (wrapping when a lane
+    is smaller), concatenated and clipped to ``rows``.  Same non-empty-lane
+    precondition as ``rotation_batch``."""
+    per = -(-rows // hw.num_hosts)
+
+    def one(lane, m):
+        return jnp.take(lane, jnp.arange(per) % m, axis=0)
+
+    picked = jax.vmap(one)(hw.fields[0], hw.counts)
+    return picked.reshape((-1,) + picked.shape[2:])[:rows]

@@ -1,0 +1,187 @@
+"""Shard → host ownership — who loads what, and why expansion never
+reshuffles.
+
+BET's §3.3 resource contract is that stage windows are nested prefixes of
+one fixed permutation.  In the distributed setting (abstract, Fig. 5) each
+host must additionally (a) load **only its own slice** of every expansion
+and (b) never re-read or reshuffle data it already holds.  Both follow from
+one structural property of the ownership map: host ``h``'s owned shards,
+listed in ascending global order, meet any global shard prefix ``[0, q)`` in
+a *prefix of that list*.  Growing the global window therefore only ever
+**appends** to every host's local window — the local windows are themselves
+nested prefixes, exactly the single-host invariant, per host.
+
+Strategies:
+
+  * ``striped`` (default) — ``owner(shard) = shard % num_hosts``.  Every
+    global prefix splits nearly evenly (±1 shard per host), so all hosts
+    stream and compute proportionally at **every** stage — the balance the
+    paper's parallel experiment relies on.
+  * ``blocked`` — contiguous ranges of shards per host.  Same nesting
+    invariant (ownership lists are still ascending) but early stages live
+    entirely on host 0; kept for layouts where block-locality of storage
+    dominates (e.g. one NAS volume per host) and documented as unbalanced.
+
+Numpy-only on import (like data/shards.py): ``partition`` lazily imports the
+jax-backed ``HostWindows`` view."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..data.shards import ShardStore
+
+STRATEGIES = ("striped", "blocked")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardOwnership:
+    """The shard→host map plus the prefix algebra the runtime needs."""
+    num_shards: int
+    num_hosts: int
+    shard_size: int
+    num_examples: int
+    strategy: str = "striped"
+
+    def __post_init__(self):
+        if self.num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {self.num_hosts}")
+        if self.shard_size < 1:
+            raise ValueError(f"shard_size must be >= 1, got {self.shard_size}")
+        if self.num_shards < self.num_hosts:
+            raise ValueError(
+                f"{self.num_hosts} hosts over {self.num_shards} shards: "
+                f"every host must own at least one shard — lower num_hosts "
+                f"or shrink shard_size")
+        if -(-self.num_examples // self.shard_size) != self.num_shards:
+            raise ValueError(
+                f"num_shards={self.num_shards} inconsistent with "
+                f"{self.num_examples} examples at shard_size="
+                f"{self.shard_size}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; pick from {STRATEGIES}")
+
+    @classmethod
+    def for_store(cls, store: ShardStore, num_hosts: int,
+                  strategy: str = "striped") -> "ShardOwnership":
+        return cls(num_shards=store.num_shards, num_hosts=num_hosts,
+                   shard_size=store.shard_size,
+                   num_examples=store.num_examples, strategy=strategy)
+
+    # ----------------------------------------------------------------- basics
+    def owner(self, shard: int) -> int:
+        if not 0 <= shard < self.num_shards:
+            raise IndexError(shard)
+        if self.strategy == "striped":
+            return shard % self.num_hosts
+        return min(self.num_hosts - 1, shard * self.num_hosts // self.num_shards)
+
+    def owned_shards(self, host: int) -> np.ndarray:
+        """Host ``host``'s shards as ascending global ids — the ascending
+        order is what makes every global prefix a local prefix."""
+        if not 0 <= host < self.num_hosts:
+            raise IndexError(host)
+        if self.strategy == "striped":
+            return np.arange(host, self.num_shards, self.num_hosts)
+        ids = np.arange(self.num_shards)
+        return ids[np.minimum(self.num_hosts - 1,
+                              ids * self.num_hosts // self.num_shards) == host]
+
+    def _shard_lengths(self, ids: np.ndarray) -> np.ndarray:
+        return np.minimum(self.shard_size,
+                          self.num_examples - ids * self.shard_size)
+
+    def num_owned_examples(self, host: int) -> int:
+        return int(self._shard_lengths(self.owned_shards(host)).sum())
+
+    @property
+    def max_owned_examples(self) -> int:
+        """Common lane capacity: the most examples any host owns (lanes are
+        padded to this, masked by per-host valid counts)."""
+        return max(self.num_owned_examples(h) for h in range(self.num_hosts))
+
+    # ---------------------------------------------------------- prefix algebra
+    def examples_in_prefix(self, host: int, n: int) -> int:
+        """How many of host ``host``'s examples fall in the global prefix
+        ``[0, n)`` — the host's local window size for stage window n.  Sums
+        to ``n`` over hosts and is monotone in ``n`` (prefix nesting)."""
+        n = max(0, min(int(n), self.num_examples))
+        ids = self.owned_shards(host)
+        lens = self._shard_lengths(ids)
+        covered = np.clip(n - ids * self.shard_size, 0, lens)
+        return int(covered.sum())
+
+    def min_full_participation_window(self) -> int:
+        """The smallest global window at which *every* host owns at least
+        one example — below this, some lanes are empty and per-host batch
+        composition (dist/collectives.rotation_batch) has nothing real to
+        serve.  Monotonicity of ``examples_in_prefix`` makes the property
+        permanent once reached, so validating ``n0`` against this validates
+        the whole schedule."""
+        return max(int(self.owned_shards(h)[0]) * self.shard_size + 1
+                   for h in range(self.num_hosts))
+
+    def local_to_global(self, host: int) -> np.ndarray:
+        """Global example indices of host ``host``'s local window, in local
+        order (ascending — local windows are prefixes of this)."""
+        ids = self.owned_shards(host)
+        lens = self._shard_lengths(ids)
+        return np.concatenate([
+            np.arange(s * self.shard_size, s * self.shard_size + k)
+            for s, k in zip(ids, lens)]) if len(ids) else np.empty(0, np.int64)
+
+    def partition(self, arrays) -> "HostWindows":
+        """Stack pre-permuted field arrays into the per-host SPMD view:
+        one ``(num_hosts, max_owned, *item)`` zero-padded lane array per
+        field plus the per-host valid counts.  Used for eval/full-data views
+        and for asserting what the streaming runtime must reproduce."""
+        from ..data.device_window import HostWindows
+        import jax.numpy as jnp
+        if isinstance(arrays, np.ndarray) or not isinstance(arrays,
+                                                            (tuple, list)):
+            arrays = (arrays,)
+        cap = self.max_owned_examples
+        counts = np.array([self.num_owned_examples(h)
+                           for h in range(self.num_hosts)], np.int32)
+        fields = []
+        for a in arrays:
+            a = np.asarray(a)
+            stacked = np.zeros((self.num_hosts, cap) + a.shape[1:], a.dtype)
+            for h in range(self.num_hosts):
+                idx = self.local_to_global(h)
+                stacked[h, : len(idx)] = a[idx]
+            fields.append(jnp.asarray(stacked))
+        return HostWindows(tuple(fields), jnp.asarray(counts))
+
+
+class OwnedShardStore(ShardStore):
+    """Host-local view of a global store: the host's owned shards as a
+    dense local store (local shard ``j`` = global shard ``owned[j]``), so a
+    per-host ``StreamingDataset``/``Prefetcher`` runs completely unchanged
+    while physically reading **only owned shards**.
+
+    Valid because ownership lists are ascending and only the globally-last
+    shard may be ragged — so every non-final local shard is full-size, the
+    base-class shard arithmetic carries over verbatim."""
+
+    def __init__(self, inner: ShardStore, ownership: ShardOwnership,
+                 host: int):
+        if inner.shard_size != ownership.shard_size or \
+                inner.num_examples != ownership.num_examples:
+            raise ValueError(
+                f"store ({inner.num_examples} examples / shard_size "
+                f"{inner.shard_size}) does not match ownership "
+                f"({ownership.num_examples} / {ownership.shard_size})")
+        self._inner = inner
+        self._ids = ownership.owned_shards(host)
+        self.host = host
+        self.shard_size = inner.shard_size
+        self.num_examples = ownership.num_owned_examples(host)
+        self.item_shape = inner.item_shape
+        self.dtype = inner.dtype
+
+    def load(self, shard: int) -> np.ndarray:
+        self.examples_in(shard)               # bounds-check local id
+        return self._inner.load(int(self._ids[shard]))

@@ -29,9 +29,36 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_host_mesh(*, model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (CPU tests / examples)."""
     devices = jax.devices()
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got {model}")
+    if model > len(devices):
+        # without this, data = 0 and the reshape builds a zero-size mesh
+        # that only fails much later with an opaque pjit error
+        raise ValueError(
+            f"model={model} exceeds the {len(devices)} available device(s): "
+            f"the data axis would be empty. Run with more devices (e.g. "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={model}) or "
+            f"shrink the model axis.")
     data = len(devices) // model
     dev = np.asarray(devices[: data * model]).reshape(data, model)
     return Mesh(dev, ("data", "model"))
+
+
+def make_hosts_mesh(num_hosts: int, *, devices=None) -> Mesh:
+    """A 1-D ``('hosts',)`` mesh, one device per logical host — the data
+    mesh of the simulated multi-host BET runtime (dist/topology.py).  Pass
+    the per-host representative devices explicitly, or let it take the first
+    ``num_hosts`` of ``jax.devices()``."""
+    devices = list(devices) if devices is not None else jax.devices()
+    if num_hosts < 1:
+        raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
+    if len(devices) < num_hosts:
+        raise RuntimeError(
+            f"need {num_hosts} devices for a {num_hosts}-host mesh, have "
+            f"{len(devices)} — run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_hosts} (simulated "
+            f"hosts) or on real hardware")
+    return Mesh(np.asarray(devices[:num_hosts]), ("hosts",))
 
 
 def dp_axes(mesh: Mesh) -> tuple:

@@ -43,10 +43,13 @@ from ..core.engine import (BETSchedule, BetEngine, FixedSteps, NeverExpand,
                            TwoTrack)
 from ..core.timemodel import SimulatedClock
 from ..core.trace import Trace
-from ..data.device_window import window_rows
+from ..data.device_window import HostWindows, window_rows
 from ..data.plane import StreamingDataset
 from ..data.shards import InMemoryShardStore
 from ..data.window import synth_corpus
+from ..dist.collectives import probe_rows, rotation_batch
+from ..dist.runtime import DistributedBetEngine, DistributedDataset
+from ..dist.topology import SimulatedTopology
 from ..models import transformer as T
 from ..optim.api import BatchOptimizer
 from . import steps
@@ -67,8 +70,17 @@ class TrainConfig:
     max_stage_steps: int = 200      # two-track safety bound
     eval_rows: int = 64             # probe size for condition (3) / eval loss
     use_plane: bool = True          # streaming data plane vs host-slice path
-    shard_size: int = 64            # corpus shard granularity (plane only)
+    # corpus shard granularity (plane only); with num_hosts > 1 it is
+    # clamped to n0 // num_hosts so every host owns a shard from stage 0
+    shard_size: int = 64
     prefetch_workers: int = 1   # one sequential load channel (§4.2's ``a``)
+    # > 1: simulated multi-host data parallelism (dist/) — each logical host
+    # streams only its owned shards and contributes batch_size/num_hosts rows
+    # per inner step from its own resident lane.  Batches are then composed
+    # per host rather than from the global permutation (the paper's
+    # distributed setting), so the trajectory intentionally differs from the
+    # single-host runs; resource accounting is per host + global.
+    num_hosts: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,12 +101,19 @@ class LMStepOptimizer(BatchOptimizer):
         return {"opt": self.init_opt(params), "t": jnp.int32(0)}
 
     def step(self, params, state, objective, data):
-        # ``data`` is either a host-path (n_t, L) slice or the plane's
-        # fixed-capacity MaskedWindow; the rotation only ever touches the
-        # valid prefix, so both paths gather identical rows.
-        toks, n = window_rows(data)
-        idx = (jnp.arange(self.batch_size) + state["t"] * self.batch_size) % n
-        rows = jnp.take(toks, idx, axis=0)
+        # ``data`` is a host-path (n_t, L) slice, the plane's fixed-capacity
+        # MaskedWindow (both: rotation through the valid prefix gathers
+        # identical rows), or the multi-host stacked HostWindows — there each
+        # host rotates through its *own* lane and the global batch is the
+        # concatenation of the per-host sub-batches (dist data parallelism).
+        if isinstance(data, HostWindows):
+            rows = rotation_batch(data, self.batch_size // data.num_hosts,
+                                  state["t"])
+        else:
+            toks, n = window_rows(data)
+            idx = (jnp.arange(self.batch_size)
+                   + state["t"] * self.batch_size) % n
+            rows = jnp.take(toks, idx, axis=0)
         batch = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
         params, opt, metrics = self.train_step(params, state["opt"], batch)
         return params, {"opt": opt, "t": state["t"] + 1}, {"f": metrics["loss"]}
@@ -125,8 +144,12 @@ def make_lm_objective(cfg, eval_rows: int = 64):
     two-track condition (3) comparison at a constant sample size and the
     two data paths bit-exact against each other."""
     def objective(params, toks):
-        rows, n = window_rows(toks)
-        probe = jnp.take(rows, jnp.arange(eval_rows) % n, axis=0)
+        if isinstance(toks, HostWindows):
+            # multi-host stage window: an equal per-host share of each lane
+            probe = probe_rows(toks, eval_rows)
+        else:
+            rows, n = window_rows(toks)
+            probe = jnp.take(rows, jnp.arange(eval_rows) % n, axis=0)
         batch = {"tokens": probe[:, :-1], "labels": probe[:, 1:]}
         return T.loss_fn(cfg, params, batch)[0]
     return objective
@@ -142,7 +165,31 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
     # corpus to device just to build it — the DeviceWindow streams that
     eval_np = corpus[:: max(1, len(corpus) // tc.eval_rows)][: tc.eval_rows]
     eval_tokens = jnp.asarray(eval_np)
-    if tc.use_plane:
+    if tc.num_hosts > 1:
+        # simulated multi-host: one streaming plane per logical host over
+        # only its owned shards, lanes of one stacked SPMD window
+        if not tc.use_plane:
+            raise ValueError("num_hosts > 1 requires the streaming plane "
+                             "(use_plane=True)")
+        if tc.batch_size % tc.num_hosts:
+            raise ValueError(
+                f"batch_size={tc.batch_size} must split evenly over "
+                f"{tc.num_hosts} hosts")
+        if tc.n0 < tc.num_hosts:
+            raise ValueError(
+                f"n0={tc.n0} cannot give each of {tc.num_hosts} hosts an "
+                f"example — per-host batch composition needs every lane "
+                f"non-empty from the first stage")
+        # clamp shard granularity so every host owns a shard inside n0:
+        # empty lanes would otherwise silently serve their zero padding
+        # through rotation_batch/probe_rows for the early stages
+        shard = min(tc.shard_size, max(1, tc.n0 // tc.num_hosts))
+        data = DistributedDataset(
+            [InMemoryShardStore(corpus, shard)],
+            topology=SimulatedTopology(tc.num_hosts),
+            prefetch_workers=tc.prefetch_workers)
+        assert data.ownership.min_full_participation_window() <= tc.n0
+    elif tc.use_plane:
         # the streaming plane: sharded corpus -> async prefetch -> a device
         # window preallocated at corpus capacity, sharded over the mesh's
         # data axes, grown in place at each expansion
@@ -176,9 +223,13 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
     else:
         raise ValueError(tc.schedule)
 
-    engine = BetEngine(schedule=BETSchedule(n0=tc.n0),
-                       step_cost=lambda n_t: tc.batch_size,
-                       wait_on_expand=True, carry_state=True)
+    # the distributed engine adds the once-per-stage collective flush of
+    # per-host records (trace.meta["host_stage_records"]) on top of the
+    # identical device-side stage execution
+    engine_cls = DistributedBetEngine if tc.num_hosts > 1 else BetEngine
+    engine = engine_cls(schedule=BETSchedule(n0=tc.n0),
+                        step_cost=lambda n_t: tc.batch_size,
+                        wait_on_expand=True, carry_state=True)
     try:
         trace = engine.run(data, optimizer, objective, policy, w0=params,
                            clock=clock, eval_data=eval_tokens,
@@ -189,6 +240,9 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
             data.close()
     if tc.use_plane:
         trace.meta["data_plane"] = data.meter.snapshot()
+    if tc.num_hosts > 1:
+        trace.meta["data_plane_hosts"] = {
+            h: data.host_meters[h].snapshot() for h in data.planes}
     return trace
 
 
@@ -204,6 +258,8 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--n0", type=int, default=64)
     ap.add_argument("--corpus", type=int, default=1024)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulated multi-host data parallelism (dist/)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -211,7 +267,8 @@ def main() -> None:
         cfg = configs.reduced(cfg)
     tc = TrainConfig(schedule=args.schedule, inner_steps=args.inner_steps,
                      final_steps=args.final_steps, batch_size=args.batch_size,
-                     seq_len=args.seq_len, n0=args.n0, corpus_size=args.corpus)
+                     seq_len=args.seq_len, n0=args.n0, corpus_size=args.corpus,
+                     num_hosts=args.hosts)
     t0 = time.time()
     trace = train_lm(cfg, tc, progress=lambda p: print(
         f"step {p.step:4d} stage {p.stage} window {p.window:5d} "

@@ -31,6 +31,26 @@ def init_params(d: int) -> jnp.ndarray:
     return jnp.zeros((d,), jnp.float32)
 
 
+def make_example_losses(loss: str = "squared_hinge",
+                        kernel_impl: str = "xla"):
+    """Returns example_losses(w, (X, y)) -> (n,) per-example losses — the
+    unregularized summands of Eq. 1.  ``make_objective`` reduces these with
+    a mean; the distributed runtime (dist/collectives.py) reduces them with
+    masked per-host partial sums under psum instead."""
+    loss_fn = LOSSES[loss]
+
+    def example_losses(w, data):
+        X, y = data
+        if kernel_impl == "pallas":
+            from ..kernels import ops as kops
+            margins = y * kops.linear_forward(X, w)
+        else:
+            margins = y * (X @ w)
+        return loss_fn(margins)
+
+    return example_losses
+
+
 def make_objective(loss: str = "squared_hinge", lam: float = 1e-4,
                    kernel_impl: str = "xla"):
     """Returns objective(w, (X, y)) -> scalar.
@@ -39,16 +59,10 @@ def make_objective(loss: str = "squared_hinge", lam: float = 1e-4,
     Pallas linear kernel (kernels/linear_grad) — used on TPU; "xla" is the
     portable default.
     """
-    loss_fn = LOSSES[loss]
+    example_losses = make_example_losses(loss, kernel_impl)
 
     def objective(w, data):
-        X, y = data
-        if kernel_impl == "pallas":
-            from ..kernels import ops as kops
-            margins = y * kops.linear_forward(X, w)
-        else:
-            margins = y * (X @ w)
-        return jnp.mean(loss_fn(margins)) + 0.5 * lam * jnp.sum(w * w)
+        return jnp.mean(example_losses(w, data)) + 0.5 * lam * jnp.sum(w * w)
 
     return objective
 

@@ -3,6 +3,7 @@ prefix-window monotonicity, bit-exact device windows vs host-path numpy
 slices, zero re-upload of resident data, no-retrace masked windows, real
 load/compute overlap, and DataAccessMeter totals matching Thm 4.1's
 accounting on the fig3 workload."""
+import threading
 import time
 
 import jax
@@ -12,8 +13,9 @@ import pytest
 
 from repro.core import BETSchedule, BetEngine, FixedSteps, SimulatedClock
 from repro.data import (DataAccessMeter, DeviceWindow, ExpandingWindow,
-                        InMemoryShardStore, MemmapShardStore, StreamingDataset,
-                        ThrottledStore, synth_corpus, window_rows)
+                        InMemoryShardStore, MemmapShardStore, Prefetcher,
+                        ShardLoadError, StreamingDataset, ThrottledStore,
+                        synth_corpus, window_rows)
 from repro.data.synthetic import load
 from repro.models.linear import init_params, make_objective
 from repro.optim import NewtonCG
@@ -141,6 +143,114 @@ def test_prefetch_overlaps_loads_with_compute():
     # the cold first shard must block
     assert m.overlap_fraction >= 0.5
     assert m.blocked_time_s < m.load_time_s
+
+
+class FlakyStore(InMemoryShardStore):
+    """Raises on a chosen shard — the dead-NAS failure mode."""
+
+    def __init__(self, data, shard_size, bad_shard):
+        super().__init__(data, shard_size)
+        self.bad_shard = bad_shard
+
+    def load(self, shard):
+        if shard == self.bad_shard:
+            raise IOError(f"storage path gone for shard {shard}")
+        return super().load(shard)
+
+
+def _wait_settled(prefetcher, timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        with prefetcher._lock:
+            if all(f.done() for f in prefetcher._pending.values()):
+                return
+        time.sleep(0.005)
+    raise TimeoutError("prefetcher never settled")
+
+
+def test_prefetch_failure_surfaces_eagerly_not_at_take():
+    """A failed background load must not stay hidden until its own take():
+    the next schedule() — i.e. the next stage boundary — re-raises it."""
+    corpus = synth_corpus(64, 8, 97, seed=7)
+    p = Prefetcher([FlakyStore(corpus, 16, bad_shard=1)])
+    p.schedule([0, 1])
+    _wait_settled(p)
+    with pytest.raises(ShardLoadError) as ei:
+        p.schedule([2])
+    assert ei.value.shard == 1
+    assert isinstance(ei.value.__cause__, IOError)
+    # the failure was consumed; healthy shards still flow
+    (rows,) = p.take(0)
+    np.testing.assert_array_equal(rows, corpus[:16])
+    p.close()
+
+
+def test_take_wraps_own_failure_with_cause():
+    corpus = synth_corpus(32, 8, 97, seed=8)
+    with Prefetcher([FlakyStore(corpus, 16, bad_shard=0)]) as p:
+        with pytest.raises(ShardLoadError) as ei:
+            p.take(0)
+        assert isinstance(ei.value.__cause__, IOError)
+
+
+def test_ensure_resident_is_retry_safe_after_transient_failure():
+    """A mid-expansion load failure must leave the plane consistent: shards
+    taken before the failure land in the window, so a retry resumes at the
+    failed shard instead of appending later shards at earlier offsets."""
+    corpus = synth_corpus(64, 8, 97, seed=10)
+
+    class FailOnce(InMemoryShardStore):
+        def __init__(self, data, shard_size):
+            super().__init__(data, shard_size)
+            self.tripped = False
+
+        def load(self, shard):
+            if shard == 1 and not self.tripped:
+                self.tripped = True
+                raise IOError("transient storage blip")
+            return super().load(shard)
+
+    with StreamingDataset([FailOnce(corpus, 16)], masked=True) as plane:
+        with pytest.raises(ShardLoadError):
+            plane.window(48)
+        win = plane.window(48)                  # retry succeeds
+        rows, _ = window_rows(win)
+        np.testing.assert_array_equal(np.asarray(rows)[:48], corpus[:48])
+        assert plane.meter.examples_loaded == 48    # each shard once
+
+
+def test_prefetcher_close_is_idempotent_and_schedule_safe():
+    corpus = synth_corpus(64, 8, 97, seed=9)
+    store = ThrottledStore(InMemoryShardStore(corpus, 16), delay_s=0.002)
+    p = Prefetcher([store])
+    p.close()
+    p.close()                                   # idempotent
+    p.schedule([0, 1])                          # racing schedule: no-op
+    with pytest.raises(RuntimeError):
+        p.take(0)                               # demand loads do fail loudly
+
+    # hammer schedule from a driving thread while the owner closes
+    p2 = Prefetcher([store])
+    errors = []
+    stop = threading.Event()
+
+    def driver():
+        i = 0
+        while not stop.is_set():
+            try:
+                p2.schedule([i % store.num_shards])
+                i += 1
+            except Exception as exc:            # any leak fails the test
+                errors.append(exc)
+                return
+
+    t = threading.Thread(target=driver)
+    t.start()
+    time.sleep(0.02)
+    p2.close()
+    stop.set()
+    t.join(timeout=5)
+    assert not t.is_alive() and errors == []
 
 
 # ------------------------------------------- engine on the plane (fig3 load)

@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import BETSchedule, SimulatedClock, theory
 from repro.data.window import ExpandingWindow, synth_corpus
+from repro.dist.ownership import ShardOwnership
 from repro.models.layers import apply_rope
 from repro.models.moe import _capacity, route
 from repro.models.common import ModelConfig
@@ -80,6 +81,80 @@ def test_window_sampling_stays_resident(bs, step):
     win = w.window()
     for row in batch:
         assert any((row == r).all() for r in win)
+
+
+# ------------------------------------------ host sharding / ownership maps
+@given(n=st.integers(1, 64), num_hosts=st.integers(1, 7),
+       seed=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_host_shard_invariants(n, num_hosts, seed):
+    """ExpandingWindow.host_shard under any (batch, hosts) split: every host
+    sees the same shape (SPMD lockstep), the unpadded portions are disjoint,
+    and together they cover the batch exactly."""
+    corpus = synth_corpus(n, 4, 97, seed=seed)
+    w = ExpandingWindow(corpus, n)
+    batch = w.window()
+    shards = [w.host_shard(batch, h, num_hosts) for h in range(num_hosts)]
+    per = -(-n // num_hosts)
+    assert all(s.shape == (per,) + batch.shape[1:] for s in shards)
+    np.testing.assert_array_equal(np.concatenate(shards)[:n], batch)
+
+
+@given(N=st.integers(2, 3000), S=st.integers(1, 64),
+       H=st.integers(1, 8), n=st.integers(0, 3500),
+       strategy=st.sampled_from(["striped", "blocked"]))
+@settings(max_examples=100, deadline=None)
+def test_ownership_prefix_invariants(N, S, H, n, strategy):
+    """The dist/ ownership map generalizes host_shard's invariants to the
+    expanding-prefix setting: owned shards partition the corpus, every
+    global prefix splits into per-host *local prefixes* that are disjoint,
+    cover it exactly, and only ever grow (no reshuffling, no re-reads)."""
+    num_shards = -(-N // S)
+    if num_shards < H:
+        return                                  # every host must own a shard
+    own = ShardOwnership(num_shards=num_shards, num_hosts=H, shard_size=S,
+                         num_examples=N, strategy=strategy)
+    # owned shards and examples partition the global permutation
+    ids = np.concatenate([own.owned_shards(h) for h in range(H)])
+    assert sorted(ids.tolist()) == list(range(num_shards))
+    ex = np.concatenate([own.local_to_global(h) for h in range(H)])
+    assert np.array_equal(np.sort(ex), np.arange(N))
+    # any global prefix [0, n) = disjoint union of per-host local prefixes
+    n_c = min(n, N)
+    ms = [own.examples_in_prefix(h, n) for h in range(H)]
+    assert sum(ms) == n_c
+    for h in range(H):
+        loc = own.local_to_global(h)
+        assert np.all(loc[: ms[h]] < n_c)       # the local prefix is inside
+        assert np.all(loc[ms[h]:] >= n_c)       # and nothing else is
+    # monotone growth: a bigger window only appends to every host
+    ms2 = [own.examples_in_prefix(h, min(n + S, N)) for h in range(H)]
+    assert all(a <= b for a, b in zip(ms, ms2))
+    # striped ownership balances every prefix to within one shard
+    if strategy == "striped":
+        assert max(ms) - min(ms) <= S
+
+
+@given(N=st.integers(4, 300), S=st.integers(1, 32), H=st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_ownership_partition_shapes_agree_across_hosts(N, S, H):
+    """The stacked partition view: equal (padded) shapes on every host,
+    valid prefixes reassemble the corpus without overlap — the SPMD analog
+    of host_shard's shape-agreement contract."""
+    if -(-N // S) < H:
+        return
+    own = ShardOwnership(num_shards=-(-N // S), num_hosts=H, shard_size=S,
+                         num_examples=N)
+    X = np.arange(N * 2, dtype=np.float32).reshape(N, 2)
+    hw = own.partition(X)
+    assert hw.fields[0].shape == (H, own.max_owned_examples, 2)
+    counts = np.asarray(hw.counts)
+    rows = np.concatenate([np.asarray(hw.fields[0][h][: counts[h]])
+                           for h in range(H)])
+    assert rows.shape == X.shape
+    np.testing.assert_array_equal(
+        rows[np.argsort(np.concatenate(
+            [own.local_to_global(h) for h in range(H)]))], X)
 
 
 # ------------------------------------------------------------------- MoE
