@@ -112,6 +112,11 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as fh:
             fh.write(text + "\n")
+    if not all(report["claims"].values()):
+        # ordinary exception: benchmarks/run.py records FAILED and continues
+        raise RuntimeError(
+            f"bench_engine claims failed: "
+            f"{[k for k, v in report['claims'].items() if not v]}")
 
 
 if __name__ == "__main__":

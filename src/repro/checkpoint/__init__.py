@@ -1,1 +1,2 @@
-from .ckpt import load_checkpoint, save_checkpoint, CheckpointManager
+from .ckpt import (CheckpointManager, load_checkpoint, load_state,
+                   save_checkpoint, save_state)

@@ -33,12 +33,21 @@ def _flatten(tree: Any) -> dict:
     return flat
 
 
-def save_checkpoint(path, params, opt_state=None, *, meta: dict | None = None):
+def save_state(path, trees: dict, *, meta: dict | None = None):
+    """Save named pytrees plus JSON metadata — the general substrate.
+
+    ``trees`` maps a name (e.g. ``"params"``, ``"opt"``) to a pytree; each
+    leaf lands in the ``.npz`` under ``<name>/<flat key>``.  A stage
+    checkpoint (elastic/checkpoint.py) stores the whole runtime state this
+    way: array state in ``trees``, scalar state (window cursor, clock,
+    meter counters, trace points) in ``meta``."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    arrays = {f"params/{k}": v for k, v in _flatten(params).items()}
-    if opt_state is not None:
-        arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    arrays = {}
+    for name, tree in trees.items():
+        if tree is None:
+            continue
+        arrays.update({f"{name}/{k}": v for k, v in _flatten(tree).items()})
     # dtype survival: bfloat16 has no native npz dtype -> save raw + tag
     dtypes = {}
     packed = {}
@@ -54,8 +63,9 @@ def save_checkpoint(path, params, opt_state=None, *, meta: dict | None = None):
     path.with_suffix(".json").write_text(json.dumps(sidecar, indent=2))
 
 
-def load_checkpoint(path, params_like, opt_like=None):
-    """Restores into the structure of ``params_like`` (shapes must match)."""
+def load_state(path, likes: dict):
+    """Restore named pytrees into the structures of ``likes`` (shapes must
+    match); a ``None`` like skips that tree.  Returns (trees, meta)."""
     path = pathlib.Path(path)
     data = np.load(path.with_suffix(".npz"))
     sidecar = json.loads(path.with_suffix(".json").read_text())
@@ -74,9 +84,19 @@ def load_checkpoint(path, params_like, opt_like=None):
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), leaves)
 
-    params = restore("params/", params_like)
-    opt = restore("opt/", opt_like) if opt_like is not None else None
-    return params, opt, sidecar["meta"]
+    trees = {name: restore(f"{name}/", like) if like is not None else None
+             for name, like in likes.items()}
+    return trees, sidecar["meta"]
+
+
+def save_checkpoint(path, params, opt_state=None, *, meta: dict | None = None):
+    save_state(path, {"params": params, "opt": opt_state}, meta=meta)
+
+
+def load_checkpoint(path, params_like, opt_like=None):
+    """Restores into the structure of ``params_like`` (shapes must match)."""
+    trees, meta = load_state(path, {"params": params_like, "opt": opt_like})
+    return trees["params"], trees["opt"], meta
 
 
 @dataclasses.dataclass

@@ -3,7 +3,8 @@
 # mini-batch baselines, the §4.2 simulated time model, and Thm 4.1 algebra —
 # all driven by the unified policy engine in engine.py.
 from .engine import (BETSchedule, BetEngine, ExpansionPolicy, FixedSteps,
-                     GradientVariance, NeverExpand, StageInfo, TwoTrack)
+                     GradientVariance, NeverExpand, ResumeState, StageEnd,
+                     StageInfo, TwoTrack)
 from .bet import run_batch, run_bet_fixed, run_gradient_variance, run_two_track
 from .dsm import run_dsm, run_minibatch
 from .timemodel import SimulatedClock

@@ -75,6 +75,37 @@ class BETSchedule:
         return ns
 
 
+# ------------------------------------------------------------- resume/hooks
+@dataclasses.dataclass(frozen=True)
+class ResumeState:
+    """Where a checkpointed run left off.  ``next_stage`` is the first stage
+    index to execute; the counters seed the engine context so step numbering,
+    stage counts and transfer accounting continue exactly where the
+    uninterrupted run would be (Thm 4.1 bookkeeping survives the restart).
+    The caller restores params/opt-state/clock/meters separately
+    (elastic/checkpoint.py bundles all of it)."""
+    next_stage: int
+    step_count: int = 0
+    stages: int = 0
+    transfers: int = 0
+
+
+@dataclasses.dataclass
+class StageEnd:
+    """What the once-per-stage boundary hook sees: everything a stage
+    checkpoint must capture (params, optimizer state, cursor, clock,
+    dataset meters) plus the live trace for event annotations."""
+    info: "StageInfo"
+    params: Any
+    opt_state: Any
+    clock: SimulatedClock
+    dataset: Any
+    trace: Trace
+    step_count: int
+    stages: int
+    transfers: int
+
+
 # ------------------------------------------------------------------ protocol
 @dataclasses.dataclass
 class StageInfo:
@@ -428,12 +459,17 @@ class BetEngine:
     wait_on_expand: bool = False
     carry_state: bool = False
     max_engine_steps: int = 100_000     # runaway-policy backstop
+    # once-per-stage boundary callback (StageEnd) — stage checkpointing
+    # plugs in here without subclassing; fault injection subclasses
+    # _stage_boundary instead (elastic/runtime.py)
+    stage_callback: Callable | None = None
 
     def run(self, dataset, optimizer: BatchOptimizer, objective: Objective,
             policy: ExpansionPolicy, *, w0=None, clock: SimulatedClock | None = None,
             eval_data=None, probe: Callable | None = None,
             trace_name: str | None = None, meta: dict | None = None,
-            progress: Callable | None = None) -> Trace:
+            progress: Callable | None = None, opt_state0=None,
+            resume: ResumeState | None = None) -> Trace:
         clock = clock or SimulatedClock()
         N = dataset.n
         # NB: with a StreamingDataset, omitting eval_data forces the whole
@@ -444,7 +480,8 @@ class BetEngine:
         # private copy: stage kernels donate their carries, which must never
         # invalidate a caller-owned w0 buffer
         w = jax.tree_util.tree_map(jnp.array, w)
-        state = optimizer.init(w)
+        state = optimizer.init(w) if opt_state0 is None else \
+            jax.tree_util.tree_map(jnp.array, opt_state0)
         trace = Trace(trace_name or policy.name,
                       meta={"engine": "BetEngine", "policy": policy.name,
                             "optimizer": optimizer.name, **(meta or {})})
@@ -452,14 +489,22 @@ class BetEngine:
         run_ctx = {"trace": trace, "clock": clock, "cost": cost,
                    "probe": probe, "progress": progress, "dataset": dataset,
                    "step_count": 0, "transfers": 0, "stages": 0}
+        first_stage = 0
+        if resume is not None:
+            run_ctx.update(step_count=resume.step_count,
+                           transfers=resume.transfers, stages=resume.stages)
+            first_stage = resume.next_stage
+            trace.meta["resumed_from_stage"] = first_stage - 1
 
         windows = policy.windows(self.schedule, N)
         if policy.kind == "two_track":
             w, state = self._run_two_track(
                 run_ctx, dataset, optimizer, objective, policy, windows,
-                w, state, full_data)
+                w, state, full_data, first_stage=first_stage)
         else:
             for stage, n_t in enumerate(windows):
+                if stage < first_stage:
+                    continue            # completed before the checkpoint
                 info = StageInfo(stage=stage, n_t=n_t,
                                  n_prev=windows[stage - 1] if stage else n_t,
                                  is_final=n_t >= N, N=N,
@@ -521,7 +566,21 @@ class BetEngine:
         self._flush_stage(ctx, policy, info, rec, extra_base=extra_base,
                           eval_charge=probe_k)
         policy.stage_end(info, rec)
+        self._stage_boundary(ctx, info, w, state)
         return w, state
+
+    def _stage_boundary(self, ctx, info: StageInfo, w, state) -> None:
+        """Once-per-stage boundary: the stage's records are flushed, the
+        trace is current, and (w, state) are the exact carries the next
+        stage starts from — the one point where a checkpoint captures a
+        resumable run and where elastic events (host loss/join, straggler
+        rebalancing) are injected between stages."""
+        if self.stage_callback is not None:
+            self.stage_callback(StageEnd(
+                info=info, params=w, opt_state=state, clock=ctx["clock"],
+                dataset=ctx["dataset"], trace=ctx["trace"],
+                step_count=ctx["step_count"], stages=ctx["stages"],
+                transfers=ctx["transfers"]))
 
     def _collect_host_records(self, ctx, info: StageInfo) -> None:
         """Once-per-stage flush hook, called right before the trace lands.
@@ -583,7 +642,8 @@ class BetEngine:
 
     # ------------------------------------------------------- two-track stages
     def _run_two_track(self, ctx, dataset, optimizer, objective,
-                       policy: TwoTrack, windows, w, state, full_data):
+                       policy: TwoTrack, windows, w, state, full_data, *,
+                       first_stage: int = 0):
         clock, cost, trace = ctx["clock"], ctx["cost"], ctx["trace"]
         collect_params = ctx["probe"] is not None
         kernel = _two_track_kernel(optimizer, objective,
@@ -591,6 +651,8 @@ class BetEngine:
                                    collect_params=collect_params)
         N = dataset.n
         for stage in range(1, len(windows)):
+            if stage < first_stage:
+                continue                # completed before the checkpoint
             n_prev, n_t = windows[stage - 1], windows[stage]
             n_next = windows[stage + 1] if stage + 1 < len(windows) else None
             info = StageInfo(stage=stage, n_t=n_t, n_prev=n_prev,
@@ -647,8 +709,11 @@ class BetEngine:
                 for p in new:
                     ctx["progress"](p)
             policy.stage_end(info, rec)
+            self._stage_boundary(ctx, info, w, state)
 
         # final phase: full window until the step budget is spent
+        if first_stage > len(windows):
+            return w, state             # checkpoint already past the final phase
         info = StageInfo(stage=len(windows), n_t=N, n_prev=N,
                          is_final=True, N=N)
         state = optimizer.reset_memory(

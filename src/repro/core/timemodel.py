@@ -63,3 +63,12 @@ class SimulatedClock:
     def snapshot(self) -> dict:
         return {"time": self.time, "accesses": self.data_accesses,
                 "loaded": self.points_loaded}
+
+    def restore(self, snap: dict) -> None:
+        """Inverse of ``snapshot``: a resumed run replays §4.2 charges on
+        top of the exact clock state the checkpoint captured, so the
+        stitched trajectory's time/access columns are bit-identical to the
+        uninterrupted run's."""
+        self.time = float(snap["time"])
+        self.data_accesses = int(snap["accesses"])
+        self.points_loaded = int(snap["loaded"])

@@ -4,5 +4,7 @@ from .shards import (DataAccessMeter, InMemoryShardStore, MemmapShardStore,
                      ShardStore, ThrottledStore)
 from .prefetch import Prefetcher, ShardLoadError
 from .device_window import (DeviceWindow, HostWindows, MaskedWindow,
-                            StackedDeviceWindow, WindowLane, window_rows)
+                            StackedDeviceWindow, WindowLane, as_host_windows,
+                            probe_rows, rolling_subwindow, rotation_rows,
+                            window_rows)
 from .plane import StreamingDataset

@@ -60,6 +60,115 @@ def window_rows(data):
     return data, data.shape[0]
 
 
+# ----------------------------------------------------- lane-aware adapters
+# Every stage view the engine hands out — a plain array / (X, y) tuple, a
+# MaskedWindow, or the multi-host HostWindows — is "lanes of masked rows":
+# one lane for the single-host paths, one per host distributed.  The
+# adapters below lift any view to that common form once, so consumers
+# (LM batch rotation, measurement probes, the distributed objective, the
+# Newton-CG Hessian subsample, the elastic lane-rebuild checks) each have
+# exactly one lane-aware implementation instead of scattered
+# ``isinstance(data, HostWindows)`` branches.
+
+def as_host_windows(data) -> "HostWindows":
+    """Lift any stage view to the stacked per-lane form.
+
+    ``HostWindows`` passes through; a ``MaskedWindow``, a plain row array,
+    or a tuple/list of per-field arrays becomes a single fully-valid lane.
+    Safe under jit: the lift only adds a leading length-1 axis."""
+    if isinstance(data, HostWindows):
+        return data
+    if isinstance(data, MaskedWindow):
+        return HostWindows(
+            (data.data[None],),
+            jnp.reshape(jnp.asarray(data.n_valid, jnp.int32), (1,)))
+    fields = tuple(data) if isinstance(data, (tuple, list)) else (data,)
+    count = jnp.asarray([fields[0].shape[0]], jnp.int32)
+    return HostWindows(tuple(f[None] for f in fields), count)
+
+
+def rotation_rows(data, batch_size: int, t):
+    """The inner step's global mini-batch: each lane contributes
+    ``batch_size // num_lanes`` rows rotating through *its own* valid
+    prefix (sequential epochs over resident data — no random disk access),
+    concatenated in lane order.  On a single lane this is exactly the
+    classic ``(arange(B) + t*B) % n`` rotation."""
+    hw = as_host_windows(data)
+    per = batch_size // hw.num_hosts
+
+    def one(rows, m):
+        idx = (jnp.arange(per) + t * per) % m
+        return jnp.take(rows, idx, axis=0)
+
+    picked = jax.vmap(one)(hw.fields[0], hw.counts)     # (lanes, per, ...)
+    return picked.reshape((-1,) + picked.shape[2:])
+
+
+def probe_rows(data, rows: int):
+    """A deterministic ``rows``-row measurement probe: an equal per-lane
+    share of each lane's valid prefix (wrapping when a lane is smaller),
+    concatenated and clipped to ``rows``.
+
+    Precondition (shared with ``rotation_rows``): every lane is non-empty —
+    a traced count cannot raise here, so callers keep windows at or above
+    ``ShardOwnership.min_full_participation_window()``."""
+    hw = as_host_windows(data)
+    per = -(-rows // hw.num_hosts)
+
+    def one(lane, m):
+        return jnp.take(lane, jnp.arange(per) % m, axis=0)
+
+    picked = jax.vmap(one)(hw.fields[0], hw.counts)
+    return picked.reshape((-1,) + picked.shape[2:])[:rows]
+
+
+def rolling_subwindow(data, fraction: float, t):
+    """Type-preserving rolling contiguous sub-window of any stage view —
+    the Newton-CG Hessian subsample (decorrelates Hessian error across
+    iterations without re-loading anything; BET's no-resampling property
+    concerns *data access*, not in-memory slicing).
+
+    A stacked multi-host window subsamples per *lane* — tree-mapping over a
+    ``HostWindows`` would slice the hosts axis instead of the example axis.
+    The slice is a static ``fraction * capacity`` rows (shapes must not
+    depend on traced values) but the *valid count* is ``fraction * m_h``
+    per lane, so the effective fraction matches the single-host
+    ``fraction * n`` semantics at every stage; the rolling offset stays
+    inside both the valid prefix and the buffer, so padding never enters
+    the Hessian.  (At ``fraction=1.0`` both layouts reduce to the
+    identity, which is what the parity runs use.)"""
+    if isinstance(data, HostWindows):
+        k = max(1, int(round(fraction * data.capacity)))
+
+        def lane_span(m):
+            # floor of 1 only for non-empty lanes: an empty lane (its
+            # first owned shard beyond the window) must contribute 0
+            # rows, not a padding row
+            k_eff = jnp.clip(jnp.round(fraction * m),
+                             jnp.minimum(m, 1), m).astype(jnp.int32)
+            lim = jnp.minimum(m - k_eff, data.capacity - k)
+            off = jnp.mod(t * jnp.maximum(1, k_eff),
+                          jnp.maximum(1, lim + 1))
+            return off, k_eff
+
+        def take_lane(lane, m):
+            off, _ = lane_span(m)
+            return jax.lax.dynamic_slice_in_dim(lane, off, k, axis=0)
+
+        fields = tuple(
+            jax.vmap(take_lane)(f, data.counts) for f in data.fields)
+        counts = jax.vmap(lambda m: lane_span(m)[1])(data.counts)
+        return HostWindows(fields, counts)
+
+    def take(x):
+        n = x.shape[0]
+        k = max(1, int(round(fraction * n)))
+        n_off = max(1, n - k + 1)
+        off = jnp.mod(t * jnp.int32(max(1, k)), n_off)
+        return jax.lax.dynamic_slice_in_dim(x, off, k, axis=0)
+    return jax.tree_util.tree_map(take, data)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class HostWindows:
@@ -214,6 +323,25 @@ class DeviceWindow:
         self._n_dev = jnp.int32(self._n)
         return self._n
 
+    # ---------------------------------------------------------------- cursor
+    def cursor(self) -> dict:
+        """Checkpointable residency bookkeeping: together with the fixed
+        permutation, ``n_valid`` fully determines the window's contents."""
+        return {"n_valid": self._n}
+
+    def restore_cursor(self, cursor: dict) -> None:
+        """Restore the valid-length bookkeeping from a checkpoint.  Pure
+        cursor state: the caller is responsible for re-landing the first
+        ``n_valid`` examples beneath it (a resumed plane replays
+        ``ensure_resident``); restoring beyond what will be re-landed would
+        expose stale buffer rows."""
+        n = int(cursor["n_valid"])
+        if not 0 <= n <= self.capacity:
+            raise ValueError(
+                f"cursor n_valid={n} outside window capacity {self.capacity}")
+        self._n = n
+        self._n_dev = jnp.int32(n)
+
     # ----------------------------------------------------------------- views
     def masked(self, n: int | None = None) -> MaskedWindow:
         """Fixed-shape view exposing the first ``n`` (default: all resident)
@@ -315,6 +443,33 @@ class StackedDeviceWindow:
                 nbytes=rows.nbytes, examples=k if self.meter_examples else 0)
         self._n[host] += k
         return self._n[host]
+
+    def reset_lane(self, host: int) -> None:
+        """Forget lane ``host``'s resident prefix — the host-loss recovery
+        primitive.  A real host failure destroys the lane's device memory,
+        so the simulation zeroes the lane as well as its cursor: the
+        replacement host must genuinely re-read the lane's owned slice from
+        storage, and tests/benchmarks can prove it did."""
+        if not 0 <= host < self.num_hosts:
+            raise IndexError(host)
+        self._buf = self._buf.at[host].set(jnp.zeros((), self._buf.dtype))
+        self._n[host] = 0
+
+    def cursor(self) -> dict:
+        """Checkpointable per-lane residency bookkeeping."""
+        return {"counts": [int(n) for n in self._n]}
+
+    def restore_cursor(self, cursor: dict) -> None:
+        """Restore per-lane valid lengths (same contract as
+        ``DeviceWindow.restore_cursor``: the caller re-lands the data)."""
+        counts = [int(c) for c in cursor["counts"]]
+        if len(counts) != self.num_hosts:
+            raise ValueError(
+                f"cursor has {len(counts)} lanes, window {self.num_hosts}")
+        if any(not 0 <= c <= self.capacity for c in counts):
+            raise ValueError(
+                f"cursor counts {counts} outside capacity {self.capacity}")
+        self._n = counts
 
     def lane(self, host: int) -> "WindowLane":
         return WindowLane(self, host)

@@ -163,6 +163,35 @@ class StreamingDataset:
     def note_access(self, examples: int) -> None:
         self.meter.record_access(examples)
 
+    # ------------------------------------------------------------ elasticity
+    @property
+    def next_shard(self) -> int:
+        """First local shard not yet landed in the window — everything at or
+        beyond this index is fair game for elastic reassignment."""
+        return self._next_shard
+
+    def pending_shards(self) -> list[int]:
+        """Scheduled-but-unfinished local shard ids (straggler backlog)."""
+        return self.prefetcher.unfinished()
+
+    def drop_pending(self, min_local_shard: int) -> list[int]:
+        """Cancel every pending prefetch at or beyond ``min_local_shard``.
+
+        After an elastic ownership delta the local→global mapping changes
+        for all local ids at or beyond the first edited position, so any
+        load still in flight under the old mapping must be dropped — landing
+        it would put the wrong shard's rows at that window offset.  Landed
+        shards (``< next_shard``) are never touched: deltas are only legal
+        beyond the resident prefix."""
+        if min_local_shard < self._next_shard:
+            raise ValueError(
+                f"cannot drop pending loads from local shard "
+                f"{min_local_shard}: shards below {self._next_shard} are "
+                f"already landed in the window")
+        stale = [i for i in self.prefetcher.scheduled()
+                 if i >= min_local_shard]
+        return self.prefetcher.cancel(stale)
+
     # ------------------------------------------------------------------ misc
     def _view(self, n_t: int):
         if self.masked:

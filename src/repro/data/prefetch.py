@@ -89,6 +89,37 @@ class Prefetcher:
                 if i not in self._pending:
                     self._pending[i] = self._pool.submit(self._timed_load, i)
 
+    def cancel(self, shard_ids) -> list[int]:
+        """Drop scheduled loads whose shards no longer belong here (elastic
+        ownership migration, lane rebuild).  Queued futures are cancelled;
+        loads already running cannot be interrupted, so their futures are
+        *dropped* instead — the result (possibly read through a stale
+        local→global mapping) is discarded, never landed at a window offset
+        it no longer corresponds to, and never metered.  Returns the local
+        shard ids that were actually pending.  No-op after ``close``."""
+        with self._lock:
+            if self._closed:
+                return []
+            dropped = []
+            for i in list(shard_ids):
+                fut = self._pending.pop(i, None)
+                if fut is not None:
+                    fut.cancel()
+                    dropped.append(i)
+        return dropped
+
+    def scheduled(self) -> list[int]:
+        """All shards currently scheduled (finished or not, not yet taken)."""
+        with self._lock:
+            return sorted(self._pending)
+
+    def unfinished(self) -> list[int]:
+        """Scheduled shards whose loads have not completed yet — the
+        straggler detector's backlog measure at a stage flush."""
+        with self._lock:
+            return sorted(i for i, fut in self._pending.items()
+                          if not fut.done())
+
     def take(self, shard: int) -> tuple[np.ndarray, ...]:
         """Block until ``shard`` is loaded and return one array per store."""
         with self._lock:

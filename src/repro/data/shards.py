@@ -97,6 +97,20 @@ class DataAccessMeter:
         d["reuse_ratio"] = round(self.reuse_ratio, 2)
         return d
 
+    def restore(self, snap: dict) -> None:
+        """Inverse of ``snapshot`` (derived keys ignored): resuming a run
+        from a stage checkpoint must continue the Thm 4.1 accounting from
+        the exact counters it stopped at, not restart them from zero."""
+        for f in dataclasses.fields(self):
+            if f.name in snap:
+                setattr(self, f.name, type(getattr(self, f.name))(snap[f.name]))
+
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "DataAccessMeter":
+        meter = cls()
+        meter.restore(snap)
+        return meter
+
     @classmethod
     def combined(cls, meters) -> "DataAccessMeter":
         """Sum counters across meters — the multi-host runtime reduces one

@@ -5,7 +5,8 @@
 # PR 2 streaming plane.
 from .topology import (HostTopology, ProcessTopology, SimulatedTopology,
                        force_host_device_flag)
-from .ownership import OwnedShardStore, ShardOwnership
+from .ownership import (ElasticOwnership, OwnedShardStore, OwnershipAlgebra,
+                        ShardOwnership)
 from .collectives import (AxisCollectives, Collectives, StackedCollectives,
                           distributed_objective, l2_regularizer,
                           masked_partial_sum, probe_rows, rotation_batch)

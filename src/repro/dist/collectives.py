@@ -33,7 +33,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..data.device_window import HostWindows
+from ..data.device_window import HostWindows, as_host_windows
+from ..data import device_window as _dw
 
 
 # ------------------------------------------------------------- communicators
@@ -100,9 +101,10 @@ def distributed_objective(example_losses: Callable, *,
 
     ``example_losses(w, fields) -> (rows,) per-example losses`` is the
     single-host per-example loss applied to one host's lane (e.g.
-    ``models.linear.make_example_losses``).  On plain (non-``HostWindows``)
-    data the objective degrades to the ordinary single-host mean, so the
-    same callable also serves host-resident eval sets.
+    ``models.linear.make_example_losses``).  Any stage view goes through the
+    lane-aware lift (``as_host_windows``): plain host-resident eval sets
+    become one fully-valid lane, so the masked psum is the *only*
+    definition — on a single lane it reduces to the ordinary mean.
 
     Note the stated fp caveat: psum re-associates the per-example reduction
     (per-host partial sums instead of one flat mean), so distributed values
@@ -110,16 +112,14 @@ def distributed_objective(example_losses: Callable, *,
     comm = comm or StackedCollectives()
 
     def objective(w, data):
-        if isinstance(data, HostWindows):
-            fields = data.fields if len(data.fields) > 1 else data.fields[0]
-            partials = comm.map_hosts(
-                lambda f, m: masked_partial_sum(example_losses, w, f, m),
-                fields, data.counts)
-            total = comm.psum(partials)
-            n = comm.psum(data.counts).astype(jnp.float32)
-            f = total / jnp.maximum(n, 1.0)
-        else:
-            f = jnp.mean(example_losses(w, data))
+        hw = as_host_windows(data)
+        fields = hw.fields if len(hw.fields) > 1 else hw.fields[0]
+        partials = comm.map_hosts(
+            lambda f, m: masked_partial_sum(example_losses, w, f, m),
+            fields, hw.counts)
+        total = comm.psum(partials)
+        n = comm.psum(hw.counts).astype(jnp.float32)
+        f = total / jnp.maximum(n, 1.0)
         return f + (regularizer(w) if regularizer is not None else 0.0)
 
     return objective
@@ -130,35 +130,24 @@ def l2_regularizer(lam: float) -> Callable:
 
 
 # -------------------------------------------------------------- LM gathers
+# Thin compatibility wrappers: the per-lane gather logic lives with the
+# other lane-aware adapters in data/device_window.py (next to window_rows),
+# where single-host and multi-host consumers share one implementation.
+
 def rotation_batch(hw: HostWindows, per_host: int, t):
     """The LM inner step's global mini-batch under data parallelism: each
     host contributes ``per_host`` rows rotating through *its own* resident
-    lane (sequential epochs over loaded data — no random disk access), and
-    the global batch is their concatenation.  Batches are deliberately not
-    resampled i.i.d. from the global window — the paper's point is exactly
-    that workers keep serving from what they hold.
+    lane; see ``data.device_window.rotation_rows``.
 
     Precondition: every lane is non-empty (``counts >= 1``).  An empty lane
     would silently serve its zero padding — callers must keep windows at or
     above ``ShardOwnership.min_full_participation_window()`` (the LM driver
     validates this at setup; a traced count cannot raise here)."""
-    def one(rows, m):
-        idx = (jnp.arange(per_host) + t * per_host) % m
-        return jnp.take(rows, idx, axis=0)
-
-    picked = jax.vmap(one)(hw.fields[0], hw.counts)     # (H, per_host, ...)
-    return picked.reshape((-1,) + picked.shape[2:])
+    return _dw.rotation_rows(hw, per_host * hw.num_hosts, t)
 
 
 def probe_rows(hw: HostWindows, rows: int):
-    """A deterministic ``rows``-row probe for measurement objectives: an
-    equal per-host share of each lane's valid prefix (wrapping when a lane
-    is smaller), concatenated and clipped to ``rows``.  Same non-empty-lane
-    precondition as ``rotation_batch``."""
-    per = -(-rows // hw.num_hosts)
-
-    def one(lane, m):
-        return jnp.take(lane, jnp.arange(per) % m, axis=0)
-
-    picked = jax.vmap(one)(hw.fields[0], hw.counts)
-    return picked.reshape((-1,) + picked.shape[2:])[:rows]
+    """A deterministic ``rows``-row probe for measurement objectives; see
+    ``data.device_window.probe_rows``.  Same non-empty-lane precondition as
+    ``rotation_batch``."""
+    return _dw.probe_rows(hw, rows)

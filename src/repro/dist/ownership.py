@@ -35,63 +35,20 @@ from ..data.shards import ShardStore
 STRATEGIES = ("striped", "blocked")
 
 
-@dataclasses.dataclass(frozen=True)
-class ShardOwnership:
-    """The shard→host map plus the prefix algebra the runtime needs."""
-    num_shards: int
-    num_hosts: int
-    shard_size: int
-    num_examples: int
-    strategy: str = "striped"
+class OwnershipAlgebra:
+    """The prefix algebra every ownership flavor shares.
 
-    def __post_init__(self):
-        if self.num_hosts < 1:
-            raise ValueError(f"num_hosts must be >= 1, got {self.num_hosts}")
-        if self.shard_size < 1:
-            raise ValueError(f"shard_size must be >= 1, got {self.shard_size}")
-        if self.num_shards < self.num_hosts:
-            raise ValueError(
-                f"{self.num_hosts} hosts over {self.num_shards} shards: "
-                f"every host must own at least one shard — lower num_hosts "
-                f"or shrink shard_size")
-        if -(-self.num_examples // self.shard_size) != self.num_shards:
-            raise ValueError(
-                f"num_shards={self.num_shards} inconsistent with "
-                f"{self.num_examples} examples at shard_size="
-                f"{self.shard_size}")
-        if self.strategy not in STRATEGIES:
-            raise ValueError(
-                f"unknown strategy {self.strategy!r}; pick from {STRATEGIES}")
-
-    @classmethod
-    def for_store(cls, store: ShardStore, num_hosts: int,
-                  strategy: str = "striped") -> "ShardOwnership":
-        return cls(num_shards=store.num_shards, num_hosts=num_hosts,
-                   shard_size=store.shard_size,
-                   num_examples=store.num_examples, strategy=strategy)
-
-    # ----------------------------------------------------------------- basics
-    def owner(self, shard: int) -> int:
-        if not 0 <= shard < self.num_shards:
-            raise IndexError(shard)
-        if self.strategy == "striped":
-            return shard % self.num_hosts
-        return min(self.num_hosts - 1, shard * self.num_hosts // self.num_shards)
-
-    def owned_shards(self, host: int) -> np.ndarray:
-        """Host ``host``'s shards as ascending global ids — the ascending
-        order is what makes every global prefix a local prefix."""
-        if not 0 <= host < self.num_hosts:
-            raise IndexError(host)
-        if self.strategy == "striped":
-            return np.arange(host, self.num_shards, self.num_hosts)
-        ids = np.arange(self.num_shards)
-        return ids[np.minimum(self.num_hosts - 1,
-                              ids * self.num_hosts // self.num_shards) == host]
+    Implementations provide ``num_shards / num_hosts / shard_size /
+    num_examples`` attributes and ``owned_shards(host) -> ascending global
+    shard ids``; everything the runtime needs — per-host window sizes,
+    local↔global index maps, the stacked eval view — follows from those."""
 
     def _shard_lengths(self, ids: np.ndarray) -> np.ndarray:
         return np.minimum(self.shard_size,
                           self.num_examples - ids * self.shard_size)
+
+    def owned_shards(self, host: int) -> np.ndarray:
+        raise NotImplementedError
 
     def num_owned_examples(self, host: int) -> int:
         return int(self._shard_lengths(self.owned_shards(host)).sum())
@@ -156,6 +113,164 @@ class ShardOwnership:
         return HostWindows(tuple(fields), jnp.asarray(counts))
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardOwnership(OwnershipAlgebra):
+    """The shard→host map plus the prefix algebra the runtime needs."""
+    num_shards: int
+    num_hosts: int
+    shard_size: int
+    num_examples: int
+    strategy: str = "striped"
+
+    def __post_init__(self):
+        if self.num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {self.num_hosts}")
+        if self.shard_size < 1:
+            raise ValueError(f"shard_size must be >= 1, got {self.shard_size}")
+        if self.num_shards < self.num_hosts:
+            raise ValueError(
+                f"{self.num_hosts} hosts over {self.num_shards} shards: "
+                f"every host must own at least one shard — lower num_hosts "
+                f"or shrink shard_size")
+        if -(-self.num_examples // self.shard_size) != self.num_shards:
+            raise ValueError(
+                f"num_shards={self.num_shards} inconsistent with "
+                f"{self.num_examples} examples at shard_size="
+                f"{self.shard_size}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; pick from {STRATEGIES}")
+
+    @classmethod
+    def for_store(cls, store: ShardStore, num_hosts: int,
+                  strategy: str = "striped") -> "ShardOwnership":
+        return cls(num_shards=store.num_shards, num_hosts=num_hosts,
+                   shard_size=store.shard_size,
+                   num_examples=store.num_examples, strategy=strategy)
+
+    # ----------------------------------------------------------------- basics
+    def owner(self, shard: int) -> int:
+        if not 0 <= shard < self.num_shards:
+            raise IndexError(shard)
+        if self.strategy == "striped":
+            return shard % self.num_hosts
+        return min(self.num_hosts - 1, shard * self.num_hosts // self.num_shards)
+
+    def owned_shards(self, host: int) -> np.ndarray:
+        """Host ``host``'s shards as ascending global ids — the ascending
+        order is what makes every global prefix a local prefix."""
+        if not 0 <= host < self.num_hosts:
+            raise IndexError(host)
+        if self.strategy == "striped":
+            return np.arange(host, self.num_shards, self.num_hosts)
+        ids = np.arange(self.num_shards)
+        return ids[np.minimum(self.num_hosts - 1,
+                              ids * self.num_hosts // self.num_shards) == host]
+
+class ElasticOwnership(OwnershipAlgebra):
+    """Explicit per-host owned-shard lists supporting *prefix-safe deltas*.
+
+    The elastic runtime's two ownership moves both preserve the invariant
+    that makes expansion append-only:
+
+      * **tail reassignment** (``reassign``) — moving shards whose global id
+        lies entirely beyond the resident window between hosts.  Because
+        every moved id sorts after *every* landed shard on both sides, the
+        merged lists stay ascending and each host's landed shards remain
+        exactly the leading prefix of its list: no resident row moves, no
+        plane bookkeeping (``StreamingDataset.next_shard``) is invalidated.
+        Used for straggler unloading and host joins.
+      * **lane handover** (no ownership change at all) — a lost host's lane
+        keeps its list and is rebuilt by a replacement host; see
+        ``elastic/runtime.py``.
+
+    Mutability is the point: the runtime mutates one shared instance and
+    refreshes the ``OwnedShardStore`` views after cancelling any in-flight
+    loads for migrated shards."""
+
+    def __init__(self, lists, shard_size: int, num_examples: int,
+                 strategy: str = "elastic"):
+        lists = [np.asarray(l, np.int64).copy() for l in lists]
+        num_shards = -(-num_examples // shard_size)
+        seen = np.sort(np.concatenate(lists)) if lists else np.empty(0)
+        if len(seen) != num_shards or \
+                not np.array_equal(seen, np.arange(num_shards)):
+            raise ValueError(
+                f"owned-shard lists must partition range({num_shards})")
+        for h, l in enumerate(lists):
+            if len(l) == 0:
+                raise ValueError(f"host {h} owns no shards")
+            if not np.all(np.diff(l) > 0):
+                raise ValueError(f"host {h}'s shard list is not ascending")
+        self._lists = lists
+        self.shard_size = int(shard_size)
+        self.num_examples = int(num_examples)
+        self.num_shards = int(num_shards)
+        self.strategy = strategy
+
+    @classmethod
+    def from_ownership(cls, own: "ShardOwnership") -> "ElasticOwnership":
+        return cls([own.owned_shards(h) for h in range(own.num_hosts)],
+                   own.shard_size, own.num_examples,
+                   strategy=f"elastic({own.strategy})")
+
+    @classmethod
+    def for_store(cls, store: ShardStore, num_hosts: int,
+                  strategy: str = "striped") -> "ElasticOwnership":
+        return cls.from_ownership(
+            ShardOwnership.for_store(store, num_hosts, strategy))
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self._lists)
+
+    def owner(self, shard: int) -> int:
+        if not 0 <= shard < self.num_shards:
+            raise IndexError(shard)
+        for h, l in enumerate(self._lists):
+            if shard in l:
+                return h
+        raise AssertionError(f"shard {shard} owned by no host")  # unreachable
+
+    def owned_shards(self, host: int) -> np.ndarray:
+        if not 0 <= host < self.num_hosts:
+            raise IndexError(host)
+        return self._lists[host].copy()
+
+    # ------------------------------------------------------------------ deltas
+    def reassign(self, src: int, dst: int, shard_ids, *,
+                 min_shard: int) -> list[int]:
+        """Move ``shard_ids`` from ``src`` to ``dst``.
+
+        ``min_shard`` is the caller's residency boundary (the first global
+        shard not intersecting any landed window, ``ceil(n_t/shard_size)``)
+        — every moved id must be at or beyond it, which is what keeps both
+        hosts' landed prefixes valid (see class docstring).  ``src`` must
+        keep at least one shard so every lane stays non-empty.  Returns the
+        moved ids, ascending."""
+        ids = sorted(int(i) for i in shard_ids)
+        if not ids:
+            return []
+        if src == dst:
+            raise ValueError("reassign needs distinct src and dst hosts")
+        for i in ids:
+            if i < min_shard:
+                raise ValueError(
+                    f"shard {i} is below the residency boundary {min_shard}:"
+                    f" moving it would reshuffle landed data")
+            if i not in self._lists[src]:
+                raise ValueError(f"shard {i} is not owned by host {src}")
+        if len(self._lists[src]) - len(ids) < 1:
+            raise ValueError(
+                f"reassigning {len(ids)} shards would leave host {src} "
+                f"with no shards")
+        keep = np.setdiff1d(self._lists[src], ids)
+        self._lists[src] = keep
+        self._lists[dst] = np.union1d(self._lists[dst],
+                                      np.asarray(ids, np.int64))
+        return ids
+
+
 class OwnedShardStore(ShardStore):
     """Host-local view of a global store: the host's owned shards as a
     dense local store (local shard ``j`` = global shard ``owned[j]``), so a
@@ -175,12 +290,32 @@ class OwnedShardStore(ShardStore):
                 f"{inner.shard_size}) does not match ownership "
                 f"({ownership.num_examples} / {ownership.shard_size})")
         self._inner = inner
+        self._ownership = ownership
         self._ids = ownership.owned_shards(host)
         self.host = host
         self.shard_size = inner.shard_size
         self.num_examples = ownership.num_owned_examples(host)
         self.item_shape = inner.item_shape
         self.dtype = inner.dtype
+
+    def refresh(self) -> None:
+        """Re-pull the owned-shard list after an elastic ownership delta.
+        Deltas are tail-only (beyond everything already landed), so local
+        ids below the plane's ``next_shard`` keep their meaning; the
+        runtime cancels pending loads for any local id at or beyond the
+        first edited position *before* mutating the ownership."""
+        self._ids = self._ownership.owned_shards(self.host)
+        self.num_examples = self._ownership.num_owned_examples(self.host)
+
+    def local_index(self, global_shard: int) -> int:
+        """Position of ``global_shard`` in this host's local order (or where
+        it would insert) — the cancellation boundary for a pending-load
+        sweep around an ownership delta."""
+        return int(np.searchsorted(self._ids, int(global_shard)))
+
+    def global_shard(self, local: int) -> int:
+        """The global shard id behind local shard ``local``."""
+        return int(self._ids[local])
 
     def load(self, shard: int) -> np.ndarray:
         self.examples_in(shard)               # bounds-check local id

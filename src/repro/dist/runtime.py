@@ -43,7 +43,8 @@ class DistributedDataset:
     def __init__(self, stores, *, topology: HostTopology | None = None,
                  num_hosts: int | None = None,
                  ownership: ShardOwnership | None = None,
-                 growth: float = 2.0, prefetch_workers: int = 1):
+                 growth: float = 2.0, prefetch_workers: int = 1,
+                 lane_capacity: int | None = None):
         stores = tuple(stores)
         if not stores:
             raise ValueError("DistributedDataset needs at least one store")
@@ -54,6 +55,8 @@ class DistributedDataset:
                              f"with {topology.num_hosts} hosts")
         self.topology = topology
         self.stores = stores
+        self.growth = growth
+        self.prefetch_workers = prefetch_workers
         self.ownership = ownership or ShardOwnership.for_store(
             stores[0], topology.num_hosts)
         if self.ownership.num_hosts != topology.num_hosts:
@@ -63,7 +66,15 @@ class DistributedDataset:
         self.host_meters = tuple(DataAccessMeter()
                                  for _ in range(topology.num_hosts))
         self._access = DataAccessMeter()        # engine's optimizer touches
-        cap = self.ownership.max_owned_examples
+        # lane_capacity > max_owned leaves headroom for elastic tail
+        # reassignment (a lane may grow past its initial owned slice)
+        cap = lane_capacity if lane_capacity is not None \
+            else self.ownership.max_owned_examples
+        if cap < self.ownership.max_owned_examples:
+            raise ValueError(
+                f"lane_capacity={cap} below the largest owned slice "
+                f"({self.ownership.max_owned_examples})")
+        self.lane_capacity = cap
         self.stacked = tuple(
             StackedDeviceWindow(
                 num_hosts=topology.num_hosts, capacity=cap,
@@ -73,12 +84,24 @@ class DistributedDataset:
             for i, s in enumerate(stores))
         self.planes = {}
         for h in topology.local_hosts:
-            owned = [OwnedShardStore(s, self.ownership, h) for s in stores]
-            self.planes[h] = StreamingDataset(
-                owned, meter=self.host_meters[h], growth=growth,
-                prefetch_workers=prefetch_workers,
-                windows=[sw.lane(h) for sw in self.stacked])
+            self.planes[h] = self._make_plane(h)
         self._counts_cache: dict[int, jnp.ndarray] = {}
+
+    # --------------------------------------------------------- plane factory
+    def _lane_stores(self, lane: int) -> list:
+        """Per-lane store views (one per field).  The elastic runtime
+        overrides this to wrap each owned store with the driving worker's
+        read-latency model."""
+        return [OwnedShardStore(s, self.ownership, lane) for s in self.stores]
+
+    def _make_plane(self, lane: int) -> StreamingDataset:
+        """One streaming plane for lane ``lane`` over its owned shards —
+        also the lane *rebuild* path: a fresh plane over a reset lane
+        re-reads exactly the lane's owned slice."""
+        return StreamingDataset(
+            self._lane_stores(lane), meter=self.host_meters[lane],
+            growth=self.growth, prefetch_workers=self.prefetch_workers,
+            windows=[sw.lane(lane) for sw in self.stacked])
 
     # ---------------------------------------------------------------- protocol
     @property

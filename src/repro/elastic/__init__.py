@@ -1,0 +1,11 @@
+# The elastic fault-tolerance subsystem (ISSUE 4): stage-boundary
+# checkpoints capturing the full runtime state, lane handover + rebuild on
+# host loss, tail reassignment for stragglers/joins, and deterministic
+# failure injection — all layered over dist/ + data/ + core/engine.py.
+# The recovery contract comes straight from §3.3: the window is a prefix of
+# one fixed permutation, so (t, n_t) + the ownership map determine exactly
+# what any replacement worker must re-read.
+from .checkpoint import (RestoredRun, StageCheckpointer, dataset_state,
+                         load_stage_checkpoint, restore_dataset)
+from .faults import FaultEvent, FaultPlan
+from .runtime import ElasticBetEngine, ElasticDataset

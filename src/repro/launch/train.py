@@ -43,13 +43,13 @@ from ..core.engine import (BETSchedule, BetEngine, FixedSteps, NeverExpand,
                            TwoTrack)
 from ..core.timemodel import SimulatedClock
 from ..core.trace import Trace
-from ..data.device_window import HostWindows, window_rows
+from ..data.device_window import probe_rows, rotation_rows
 from ..data.plane import StreamingDataset
 from ..data.shards import InMemoryShardStore
 from ..data.window import synth_corpus
-from ..dist.collectives import probe_rows, rotation_batch
-from ..dist.runtime import DistributedBetEngine, DistributedDataset
 from ..dist.topology import SimulatedTopology
+from ..elastic import (ElasticBetEngine, ElasticDataset, FaultPlan,
+                       StageCheckpointer)
 from ..models import transformer as T
 from ..optim.api import BatchOptimizer
 from . import steps
@@ -81,6 +81,14 @@ class TrainConfig:
     # distributed setting), so the trajectory intentionally differs from the
     # single-host runs; resource accounting is per host + global.
     num_hosts: int = 1
+    # fault tolerance (elastic/): stage checkpoints land in ckpt_dir; resume
+    # restarts from the latest one (bit-compatible cursor/clock/meter state);
+    # kill_host_at="STAGE:HOST" injects a host loss at that stage boundary
+    # (hosts > 1 — the lane is handed over and rebuilt from storage)
+    ckpt_dir: str | None = None
+    resume: bool = False
+    kill_host_at: str | None = None
+    straggler_deadline_s: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,14 +114,8 @@ class LMStepOptimizer(BatchOptimizer):
         # identical rows), or the multi-host stacked HostWindows — there each
         # host rotates through its *own* lane and the global batch is the
         # concatenation of the per-host sub-batches (dist data parallelism).
-        if isinstance(data, HostWindows):
-            rows = rotation_batch(data, self.batch_size // data.num_hosts,
-                                  state["t"])
-        else:
-            toks, n = window_rows(data)
-            idx = (jnp.arange(self.batch_size)
-                   + state["t"] * self.batch_size) % n
-            rows = jnp.take(toks, idx, axis=0)
+        # One lane-aware gather serves all three (data/device_window.py).
+        rows = rotation_rows(data, self.batch_size, state["t"])
         batch = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
         params, opt, metrics = self.train_step(params, state["opt"], batch)
         return params, {"opt": opt, "t": state["t"] + 1}, {"f": metrics["loss"]}
@@ -144,12 +146,9 @@ def make_lm_objective(cfg, eval_rows: int = 64):
     two-track condition (3) comparison at a constant sample size and the
     two data paths bit-exact against each other."""
     def objective(params, toks):
-        if isinstance(toks, HostWindows):
-            # multi-host stage window: an equal per-host share of each lane
-            probe = probe_rows(toks, eval_rows)
-        else:
-            rows, n = window_rows(toks)
-            probe = jnp.take(rows, jnp.arange(eval_rows) % n, axis=0)
+        # host-path slices, MaskedWindows, and multi-host stage windows all
+        # probe through the one lane-aware gather (an equal per-lane share)
+        probe = probe_rows(toks, eval_rows)
         batch = {"tokens": probe[:, :-1], "labels": probe[:, 1:]}
         return T.loss_fn(cfg, params, batch)[0]
     return objective
@@ -184,10 +183,14 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
         # empty lanes would otherwise silently serve their zero padding
         # through rotation_batch/probe_rows for the early stages
         shard = min(tc.shard_size, max(1, tc.n0 // tc.num_hosts))
-        data = DistributedDataset(
+        # the elastic dataset behaves identically to DistributedDataset
+        # until a fault/deadline event fires; slack leaves lane headroom
+        # for straggler tail reassignment
+        data = ElasticDataset(
             [InMemoryShardStore(corpus, shard)],
             topology=SimulatedTopology(tc.num_hosts),
-            prefetch_workers=tc.prefetch_workers)
+            prefetch_workers=tc.prefetch_workers,
+            capacity_slack=2.0 if tc.straggler_deadline_s else 1.0)
         assert data.ownership.min_full_participation_window() <= tc.n0
     elif tc.use_plane:
         # the streaming plane: sharded corpus -> async prefetch -> a device
@@ -225,19 +228,53 @@ def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
 
     # the distributed engine adds the once-per-stage collective flush of
     # per-host records (trace.meta["host_stage_records"]) on top of the
-    # identical device-side stage execution
-    engine_cls = DistributedBetEngine if tc.num_hosts > 1 else BetEngine
-    engine = engine_cls(schedule=BETSchedule(n0=tc.n0),
-                        step_cost=lambda n_t: tc.batch_size,
-                        wait_on_expand=True, carry_state=True)
+    # identical device-side stage execution; the elastic engine additionally
+    # applies fault events and the straggler deadline at stage boundaries
+    if tc.num_hosts > 1:
+        engine = ElasticBetEngine(schedule=BETSchedule(n0=tc.n0),
+                                  step_cost=lambda n_t: tc.batch_size,
+                                  wait_on_expand=True, carry_state=True,
+                                  deadline_s=tc.straggler_deadline_s)
+        if tc.kill_host_at:
+            engine.faults = FaultPlan.parse([f"kill@{tc.kill_host_at}"])
+    else:
+        if tc.kill_host_at:
+            raise ValueError("--kill-host-at injects a *host* loss and "
+                             "needs --hosts > 1; single-host restarts are "
+                             "the --resume path")
+        if tc.straggler_deadline_s is not None:
+            raise ValueError("--straggler-deadline rebalances shards "
+                             "*between* hosts and needs --hosts > 1")
+        engine = BetEngine(schedule=BETSchedule(n0=tc.n0),
+                           step_cost=lambda n_t: tc.batch_size,
+                           wait_on_expand=True, carry_state=True)
+    run_kw: dict = {"w0": params}
+    if tc.ckpt_dir:
+        engine.stage_callback = StageCheckpointer(tc.ckpt_dir)
+    rewarm = None
+    if tc.resume:
+        if not tc.ckpt_dir:
+            raise ValueError("--resume needs --ckpt-dir to restore from")
+        restored = StageCheckpointer(tc.ckpt_dir).restore(
+            params, optimizer.init(params))
+        if restored is None:
+            raise FileNotFoundError(
+                f"--resume: no stage checkpoint under {tc.ckpt_dir}")
+        restored.restore_clock(clock)
+        rewarm = restored.restore_dataset(data)
+        run_kw = {"w0": restored.params, "opt_state0": restored.opt_state,
+                  "resume": restored.resume}
     try:
-        trace = engine.run(data, optimizer, objective, policy, w0=params,
+        trace = engine.run(data, optimizer, objective, policy,
                            clock=clock, eval_data=eval_tokens,
                            trace_name=f"lm_{tc.schedule}",
-                           meta={"arch": cfg.name}, progress=progress)
+                           meta={"arch": cfg.name}, progress=progress,
+                           **run_kw)
     finally:
         if tc.use_plane:
             data.close()
+    if rewarm is not None:
+        trace.meta["resume_rewarm"] = rewarm
     if tc.use_plane:
         trace.meta["data_plane"] = data.meter.snapshot()
     if tc.num_hosts > 1:
@@ -260,6 +297,23 @@ def main() -> None:
     ap.add_argument("--corpus", type=int, default=1024)
     ap.add_argument("--hosts", type=int, default=1,
                     help="simulated multi-host data parallelism (dist/)")
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="save a full-runtime stage checkpoint at every "
+                         "stage boundary (elastic/checkpoint.py)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest stage checkpoint from "
+                         "--ckpt-dir and continue the schedule from there "
+                         "(bit-compatible cursor/clock/meter state)")
+    ap.add_argument("--kill-host-at", type=str, default=None,
+                    metavar="STAGE:HOST",
+                    help="inject a host loss at a stage boundary (needs "
+                         "--hosts > 1): the lane is handed to a survivor "
+                         "and rebuilt by re-reading only its owned slice")
+    ap.add_argument("--straggler-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="deadline-based stage flush: migrate a straggler "
+                         "host's next-expansion shards when its backlog "
+                         "will not drain in time")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -268,20 +322,35 @@ def main() -> None:
     tc = TrainConfig(schedule=args.schedule, inner_steps=args.inner_steps,
                      final_steps=args.final_steps, batch_size=args.batch_size,
                      seq_len=args.seq_len, n0=args.n0, corpus_size=args.corpus,
-                     num_hosts=args.hosts)
+                     num_hosts=args.hosts, ckpt_dir=args.ckpt_dir,
+                     resume=args.resume, kill_host_at=args.kill_host_at,
+                     straggler_deadline_s=args.straggler_deadline)
     t0 = time.time()
     trace = train_lm(cfg, tc, progress=lambda p: print(
         f"step {p.step:4d} stage {p.stage} window {p.window:5d} "
         f"t={p.time:9.0f} loss={p.f_window:.4f} eval={p.f_full:.4f}",
         flush=True))
-    p = trace.final()
-    print(f"done in {time.time()-t0:.1f}s wall; simulated time {p.time:.0f}, "
-          f"accesses {p.accesses}, final eval loss {p.f_full:.4f}")
+    if trace.points:
+        p = trace.final()
+        print(f"done in {time.time()-t0:.1f}s wall; simulated time "
+              f"{p.time:.0f}, accesses {p.accesses}, "
+              f"final eval loss {p.f_full:.4f}")
+    else:
+        print(f"done in {time.time()-t0:.1f}s wall; the checkpoint is "
+              f"already at the end of the schedule — nothing left to run")
     dp = trace.meta.get("data_plane")
     if dp:
         print(f"data plane: loaded {dp['examples_loaded']} examples "
               f"({dp['bytes_loaded']} B) once, reuse x{dp['reuse_ratio']}, "
               f"load/compute overlap {dp['overlap_fraction']:.2f}")
+    rw = trace.meta.get("resume_rewarm")
+    if rw:
+        print(f"resumed from stage checkpoint: re-warmed "
+              f"{rw['examples_loaded']} resident examples "
+              f"({rw['bytes_loaded']} B) outside the Thm 4.1 counters")
+    for group in trace.meta.get("elastic_events", []):
+        for ev in group["events"]:
+            print(f"elastic @stage {group['stage']}: {ev}")
 
 
 if __name__ == "__main__":

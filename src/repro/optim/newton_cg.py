@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from .api import (BatchOptimizer, Objective, armijo_line_search,
                   hessian_vector_product, tree_axpy, tree_dot, tree_scale,
                   tree_zeros_like)
-from ..data.device_window import HostWindows
+from ..data.device_window import rolling_subwindow
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,51 +33,12 @@ class NewtonCG(BatchOptimizer):
         return {"t": jnp.int32(0)}
 
     def _subsample(self, data, t):
-        """Rolling contiguous sub-window: decorrelates Hessian error across
-        iterations without any re-loading (the window is already in memory;
-        BET's no-resampling property concerns *data access*, not in-memory
-        slicing).
-
-        A stacked multi-host window subsamples per *lane* — tree-mapping
-        over a ``HostWindows`` would slice the hosts axis instead of the
-        example axis.  The slice is a static ``R * capacity`` rows (shapes
-        must not depend on traced values) but the *valid count* is
-        ``R * m_h`` per lane, so the effective fraction matches the
-        single-host ``R * n`` semantics at every stage; the rolling offset
-        stays inside both the valid prefix and the buffer, so padding never
-        enters the Hessian.  (At ``hessian_fraction=1.0`` both layouts
-        reduce to the identity, which is what the parity runs use.)"""
-        if isinstance(data, HostWindows):
-            k = max(1, int(round(self.hessian_fraction * data.capacity)))
-            frac = self.hessian_fraction
-
-            def lane_span(m):
-                # floor of 1 only for non-empty lanes: an empty lane (its
-                # first owned shard beyond the window) must contribute 0
-                # rows, not a padding row
-                k_eff = jnp.clip(jnp.round(frac * m),
-                                 jnp.minimum(m, 1), m).astype(jnp.int32)
-                lim = jnp.minimum(m - k_eff, data.capacity - k)
-                off = jnp.mod(t * jnp.maximum(1, k_eff),
-                              jnp.maximum(1, lim + 1))
-                return off, k_eff
-
-            def take_lane(lane, m):
-                off, _ = lane_span(m)
-                return jax.lax.dynamic_slice_in_dim(lane, off, k, axis=0)
-
-            fields = tuple(
-                jax.vmap(take_lane)(f, data.counts) for f in data.fields)
-            counts = jax.vmap(lambda m: lane_span(m)[1])(data.counts)
-            return HostWindows(fields, counts)
-
-        def take(x):
-            n = x.shape[0]
-            k = max(1, int(round(self.hessian_fraction * n)))
-            n_off = max(1, n - k + 1)
-            off = jnp.mod(t * jnp.int32(max(1, k)), n_off)
-            return jax.lax.dynamic_slice_in_dim(x, off, k, axis=0)
-        return jax.tree_util.tree_map(take, data)
+        """Rolling contiguous sub-window of the stage view — the shared
+        lane-aware adapter (``data.device_window.rolling_subwindow``)
+        handles plain ``(X, y)`` windows and stacked multi-host
+        ``HostWindows`` identically (per-lane valid counts, padding never
+        enters the Hessian)."""
+        return rolling_subwindow(data, self.hessian_fraction, t)
 
     def step(self, params, state, objective: Objective, data):
         f0, g = jax.value_and_grad(objective)(params, data)

@@ -1,0 +1,48 @@
+"""benchmarks/run.py --smoke as a tier-1 gate: every bench_* JSON module
+runs at tiny sizes and its claim assertions execute, so the perf anchors
+(BENCH_engine/data/dist/elastic) cannot silently rot between the full
+benchmark runs.  Reports land in a temp directory — the committed
+BENCH_*.json artifacts at the repo root are never touched."""
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_bench_smoke_asserts_every_json_anchor():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    anchors_before = {p.name: p.stat().st_mtime_ns
+                      for p in REPO_ROOT.glob("BENCH_*.json")}
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, (out.stdout[-4000:], out.stderr[-4000:])
+    # every bench_* module ran and asserted its claims
+    for name in ("bench_engine", "bench_data", "bench_dist",
+                 "bench_elastic"):
+        assert f"{name}/__wall__" in out.stdout, out.stdout[-4000:]
+        assert f"{name}/__wall__" not in [
+            l for l in out.stdout.splitlines() if l.endswith("FAILED")]
+    assert "FAILED" not in out.stdout
+    # the smoke reports exist, carry all-true claims, and went to the temp
+    # dir — the committed anchors are untouched
+    m = re.search(r"smoke reports under (\S+)", out.stdout)
+    assert m, out.stdout[-2000:]
+    smoke_dir = pathlib.Path(m.group(1))
+    assert smoke_dir != REPO_ROOT
+    for name in ("engine", "data", "dist", "elastic"):
+        report = json.loads((smoke_dir / f"BENCH_{name}.json").read_text())
+        claims = report["claims"]
+        assert claims and all(claims.values()), (name, claims)
+    anchors_after = {p.name: p.stat().st_mtime_ns
+                     for p in REPO_ROOT.glob("BENCH_*.json")}
+    assert anchors_after == anchors_before

@@ -1,13 +1,21 @@
 """Checkpoint substrate: exact round-trip (incl. bfloat16) + BET schedule
-state + rolling retention."""
+state + rolling retention + window-cursor/meter round-trips (the runtime
+state a stage checkpoint carries beyond params/opt)."""
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro import configs
-from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointManager, load_checkpoint, load_state,
+                              save_checkpoint, save_state)
+from repro.data import (DataAccessMeter, DeviceWindow, InMemoryShardStore,
+                        StackedDeviceWindow, StreamingDataset, window_rows)
 from repro.launch import steps
 from repro.models import transformer as T
+
+pytestmark = pytest.mark.tier1
 
 
 def test_roundtrip_bf16_params(tmp_path):
@@ -43,6 +51,65 @@ def test_resume_training_bitexact(tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(params1),
                     jax.tree_util.tree_leaves(params2)):
         assert jnp.array_equal(a, b)
+
+
+def test_window_cursor_and_meter_roundtrip(tmp_path):
+    """Stage-checkpoint runtime state: MaskedWindow/DeviceWindow and
+    StackedDeviceWindow cursors plus DataAccessMeter counters survive a
+    save -> restore exactly (counters and n_valid identical)."""
+    corpus = np.arange(64 * 4, dtype=np.float32).reshape(64, 4)
+    with StreamingDataset([InMemoryShardStore(corpus, 16)],
+                          masked=True) as plane:
+        win = plane.window(48)                  # a MaskedWindow view
+        assert int(window_rows(win)[1]) == 48
+        cursor = plane.windows[0].cursor()
+        meter = plane.meter.snapshot()
+    sw = StackedDeviceWindow(num_hosts=3, capacity=8, item_shape=(2,),
+                             dtype=np.float32)
+    sw.append(0, np.ones((5, 2), np.float32))
+    sw.append(2, np.ones((3, 2), np.float32))
+    stacked_cursor = sw.cursor()
+
+    save_state(tmp_path / "rt", {"params": jnp.zeros(3)},
+               meta={"window": cursor, "stacked": stacked_cursor,
+                     "meter": meter})
+    _, meta = load_state(tmp_path / "rt", {"params": jnp.zeros(3)})
+
+    fresh = DeviceWindow(capacity=64, item_shape=(4,), dtype=np.float32)
+    fresh.restore_cursor(meta["window"])
+    assert fresh.n_valid == 48 == cursor["n_valid"]
+    assert int(fresh.masked().n_valid) == 48    # device scalar tracks it
+    fresh_sw = StackedDeviceWindow(num_hosts=3, capacity=8, item_shape=(2,),
+                                   dtype=np.float32)
+    fresh_sw.restore_cursor(meta["stacked"])
+    assert fresh_sw.counts.tolist() == [5, 0, 3] == stacked_cursor["counts"]
+    restored_meter = DataAccessMeter.from_snapshot(meta["meter"])
+    assert restored_meter.snapshot() == meter   # every counter identical
+    assert restored_meter.examples_loaded == 48
+    # invalid cursors are rejected, not silently clamped
+    with pytest.raises(ValueError):
+        fresh.restore_cursor({"n_valid": 65})
+    with pytest.raises(ValueError):
+        fresh_sw.restore_cursor({"counts": [1, 2]})
+    with pytest.raises(ValueError):
+        fresh_sw.restore_cursor({"counts": [9, 0, 0]})
+
+
+def test_save_state_named_trees_roundtrip(tmp_path):
+    """The generalized substrate: arbitrary named pytrees round-trip."""
+    trees = {"params": {"w": jnp.arange(4.0)},
+             "opt": {"m": jnp.ones((2, 2)), "t": jnp.int32(7)},
+             "extra": [jnp.zeros(3), jnp.bfloat16(1.5)]}
+    save_state(tmp_path / "st", trees, meta={"stage": 3})
+    out, meta = load_state(tmp_path / "st", {
+        "params": trees["params"], "opt": trees["opt"],
+        "extra": trees["extra"], "skipped": None})
+    assert meta["stage"] == 3
+    assert out["skipped"] is None
+    for name in ("params", "opt", "extra"):
+        for a, b in zip(jax.tree_util.tree_leaves(trees[name]),
+                        jax.tree_util.tree_leaves(out[name])):
+            assert jnp.array_equal(a, b) and a.dtype == b.dtype
 
 
 def test_manager_rolls_and_restores_latest(tmp_path):

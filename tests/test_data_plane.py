@@ -219,6 +219,44 @@ def test_ensure_resident_is_retry_safe_after_transient_failure():
         assert plane.meter.examples_loaded == 48    # each shard once
 
 
+def test_prefetcher_cancel_drops_pending_and_inflight():
+    """Elastic ownership migration: cancelled loads — queued *or* already
+    running — are dropped, never landed; a later take of the same local id
+    degrades to a fresh demand load under the new mapping."""
+    corpus = synth_corpus(96, 8, 97, seed=11)
+    store = ThrottledStore(InMemoryShardStore(corpus, 16), delay_s=0.05)
+    with Prefetcher([store]) as p:
+        p.schedule([0, 1, 2, 3])
+        # shard 0 is in flight (1 worker), 1..3 queued
+        dropped = p.cancel([1, 2, 3])
+        assert dropped == [1, 2, 3]
+        assert p.scheduled() == [0]
+        assert p.cancel([7]) == []              # unknown ids: no-op
+        (rows,) = p.take(0)                     # untouched load still lands
+        np.testing.assert_array_equal(rows, corpus[:16])
+        (rows,) = p.take(2)                     # re-demand after the cancel
+        np.testing.assert_array_equal(rows, corpus[32:48])
+    assert p.cancel([0]) == []                  # post-close: silent no-op
+
+
+def test_plane_drop_pending_guards_landed_prefix():
+    corpus = synth_corpus(96, 8, 97, seed=12)
+    store = ThrottledStore(InMemoryShardStore(corpus, 16), delay_s=0.02)
+    with StreamingDataset([store], masked=True) as plane:
+        plane.window(32)                        # shards 0-1 landed
+        plane.prefetch(96)                      # 2-5 scheduled
+        assert plane.next_shard == 2
+        dropped = plane.drop_pending(3)
+        assert all(i >= 3 for i in dropped)
+        with pytest.raises(ValueError, match="already landed"):
+            plane.drop_pending(1)
+        # the window still expands correctly after the drop
+        win = plane.window(96)
+        rows, _ = window_rows(win)
+        np.testing.assert_array_equal(np.asarray(rows)[:96], corpus)
+        assert plane.meter.examples_loaded == 96
+
+
 def test_prefetcher_close_is_idempotent_and_schedule_safe():
     corpus = synth_corpus(64, 8, 97, seed=9)
     store = ThrottledStore(InMemoryShardStore(corpus, 16), delay_s=0.002)

@@ -1,0 +1,475 @@
+"""Elastic fault-tolerance invariants (tier1): prefix-safe ownership
+deltas, lane handover + rebuild on host loss (re-read = the lost owned
+slice only, survivors untouched), straggler tail reassignment with
+in-flight load cancellation, stage checkpoints capturing the full runtime
+state, and bit-compatible kill/resume for scan and two-track schedules."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (BETSchedule, BetEngine, FixedSteps, ResumeState,
+                        SimulatedClock, TwoTrack)
+from repro.data import InMemoryShardStore, StreamingDataset
+from repro.data.synthetic import make_classification
+from repro.dist import (DistributedDataset, ElasticOwnership, ShardOwnership,
+                        distributed_objective, l2_regularizer)
+from repro.elastic import (ElasticBetEngine, ElasticDataset, FaultEvent,
+                           FaultPlan, StageCheckpointer, dataset_state,
+                           restore_dataset)
+from repro.models.linear import (init_params, make_example_losses,
+                                 make_objective)
+from repro.optim import NewtonCG
+
+pytestmark = pytest.mark.tier1
+
+LAM = 1e-3
+
+
+def small_problem(n=384, d=24, seed=0):
+    ds = make_classification("elastic_t", n=n, d=d, seed=seed)
+    obj = make_objective("squared_hinge", lam=LAM)
+    dobj = distributed_objective(make_example_losses("squared_hinge"),
+                                 regularizer=l2_regularizer(LAM))
+    return ds, obj, dobj, init_params(ds.d)
+
+
+def engine_kw():
+    return dict(schedule=BETSchedule(n0=48))
+
+
+POLICY_KW = dict(inner_steps=2, final_steps=4)
+
+
+def make_dd(X, y, num_hosts=3, shard=32, **kw):
+    return ElasticDataset([InMemoryShardStore(X, shard),
+                           InMemoryShardStore(y, shard)],
+                          num_hosts=num_hosts, **kw)
+
+
+# ----------------------------------------------------------- ownership deltas
+def test_elastic_ownership_matches_strided_base():
+    base = ShardOwnership(num_shards=12, num_hosts=3, shard_size=8,
+                          num_examples=96)
+    el = ElasticOwnership.from_ownership(base)
+    for h in range(3):
+        np.testing.assert_array_equal(el.owned_shards(h),
+                                      base.owned_shards(h))
+        for n in (0, 10, 48, 96):
+            assert el.examples_in_prefix(h, n) == \
+                base.examples_in_prefix(h, n)
+    assert el.max_owned_examples == base.max_owned_examples
+    assert el.min_full_participation_window() == \
+        base.min_full_participation_window()
+    assert el.owner(5) == base.owner(5)
+
+
+def test_elastic_ownership_validates_lists():
+    with pytest.raises(ValueError, match="partition"):
+        ElasticOwnership([[0, 1], [1, 2]], shard_size=8, num_examples=24)
+    with pytest.raises(ValueError, match="no shards"):
+        ElasticOwnership([[0, 1, 2], []], shard_size=8, num_examples=24)
+    with pytest.raises(ValueError, match="ascending"):
+        ElasticOwnership([[1, 0], [2]], shard_size=8, num_examples=24)
+
+
+def test_reassign_tail_preserves_prefix_invariant():
+    el = ElasticOwnership.for_store(
+        InMemoryShardStore(np.zeros((128, 2), np.float32), 8), 4)
+    # landed boundary: window 48 covers shards 0..5 -> boundary shard 6
+    boundary = 6
+    before = {h: [el.examples_in_prefix(h, n) for n in (16, 48)]
+              for h in range(4)}
+    moved = el.reassign(1, 0, [9, 13], min_shard=boundary)
+    assert moved == [9, 13]
+    # lists stay ascending and still partition the shard range
+    ids = np.concatenate([el.owned_shards(h) for h in range(4)])
+    assert sorted(ids.tolist()) == list(range(16))
+    for h in range(4):
+        assert np.all(np.diff(el.owned_shards(h)) > 0)
+        # nothing below the boundary moved: resident windows unchanged
+        assert [el.examples_in_prefix(h, n) for n in (16, 48)] == before[h]
+    # prefix shares still partition every window
+    for n in (0, 48, 100, 128):
+        assert sum(el.examples_in_prefix(h, n) for h in range(4)) == n
+    # receiving host's future share grew, source's shrank
+    assert el.examples_in_prefix(0, 128) == 32 + 16
+    assert el.examples_in_prefix(1, 128) == 32 - 16
+
+
+def test_reassign_rejects_illegal_moves():
+    el = ElasticOwnership.for_store(
+        InMemoryShardStore(np.zeros((128, 2), np.float32), 8), 4)
+    with pytest.raises(ValueError, match="boundary"):
+        el.reassign(1, 0, [1], min_shard=6)        # below residency
+    with pytest.raises(ValueError, match="not owned"):
+        el.reassign(1, 0, [8], min_shard=6)        # host 0's shard
+    with pytest.raises(ValueError, match="no shards"):
+        el.reassign(1, 0, [1, 5, 9, 13], min_shard=0)   # would empty host 1
+    with pytest.raises(ValueError, match="distinct"):
+        el.reassign(1, 1, [9], min_shard=6)
+
+
+# ------------------------------------------------------------------ host loss
+def test_lose_host_rebuilds_only_the_lost_slice():
+    ds, _, _, _ = small_problem(n=96, d=4)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    with make_dd(X, y, num_hosts=3, shard=16) as dd:
+        ref = dd.ownership.partition((X, y))
+        dd.window(64)
+        loads_before = [m.examples_loaded for m in dd.host_meters]
+        ups_before = [m.bytes_uploaded for m in dd.host_meters]
+        rec = dd.lose_host(1, n_t=64)
+        lane = rec["lanes"][0]
+        assert lane["lane"] == 1 and rec["worker"] == 1
+        assert dd.assignment[1] in dd.alive and 1 not in dd.alive
+        # recovery re-read: exactly the lost lane's owned slice of [0, 64)
+        k = dd.ownership.examples_in_prefix(1, 64)
+        assert lane["reread_examples"] == k
+        assert lane["reread_examples"] <= lane["owned_examples"]
+        loads_after = [m.examples_loaded for m in dd.host_meters]
+        ups_after = [m.bytes_uploaded for m in dd.host_meters]
+        for h in (0, 2):                       # survivors: fully untouched
+            assert loads_after[h] == loads_before[h]
+            assert ups_after[h] == ups_before[h]
+        assert loads_after[1] == loads_before[1] + k
+        # the rebuilt lane serves byte-identical data
+        hw = dd.window(64)
+        m = int(hw.counts[1])
+        np.testing.assert_array_equal(np.asarray(hw.fields[0][1][:m]),
+                                      np.asarray(ref.fields[0][1][:m]))
+        # continued expansion appends normally after the rebuild
+        hw = dd.window(96)
+        m = int(hw.counts[1])
+        np.testing.assert_array_equal(np.asarray(hw.fields[0][1][:m]),
+                                      np.asarray(ref.fields[0][1][:m]))
+
+
+def test_lose_host_refuses_last_survivor_and_unknown_worker():
+    ds, _, _, _ = small_problem(n=96, d=4)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    with make_dd(X, y, num_hosts=2, shard=16) as dd:
+        dd.window(32)
+        dd.lose_host(0, n_t=32)
+        with pytest.raises(ValueError, match="not alive"):
+            dd.lose_host(0, n_t=32)
+        with pytest.raises(RuntimeError, match="last alive"):
+            dd.lose_host(1, n_t=32)
+
+
+def test_rejoin_adopts_lane_without_reread():
+    ds, _, _, _ = small_problem(n=96, d=4)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    with make_dd(X, y, num_hosts=3, shard=16) as dd:
+        dd.window(96)
+        dd.lose_host(2, n_t=96)
+        adopter = dd.assignment[2]
+        loads = [m.examples_loaded for m in dd.host_meters]
+        rec = dd.rejoin_host(2)
+        # the doubled-up survivor hands the lane back; no storage re-read
+        assert rec["lane"] == 2 and rec["from_worker"] == adopter
+        assert dd.assignment[2] == 2 and 2 in dd.alive
+        assert [m.examples_loaded for m in dd.host_meters] == loads
+
+
+def test_kill_mid_run_trajectory_is_unchanged():
+    """Lane rebuild restores byte-identical lanes, so the engine trajectory
+    across a mid-run host loss equals the uninterrupted run exactly."""
+    ds, _, dobj, w0 = small_problem()
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    opt = NewtonCG(hessian_fraction=1.0)
+    with make_dd(X, y, num_hosts=4, shard=32) as dd:
+        tr_ref = ElasticBetEngine(**engine_kw()).run(
+            dd, opt, dobj, FixedSteps(**POLICY_KW), w0=w0,
+            clock=SimulatedClock(), eval_data=(ds.X, ds.y))
+    faults = FaultPlan([FaultEvent(stage=1, kind="kill", host=2)])
+    with make_dd(X, y, num_hosts=4, shard=32) as dd:
+        tr = ElasticBetEngine(faults=faults, **engine_kw()).run(
+            dd, opt, dobj, FixedSteps(**POLICY_KW), w0=w0,
+            clock=SimulatedClock(), eval_data=(ds.X, ds.y))
+        assert 2 not in dd.alive
+    np.testing.assert_array_equal(tr_ref.column("f_window"),
+                                  tr.column("f_window"))
+    np.testing.assert_array_equal(tr_ref.column("f_full"),
+                                  tr.column("f_full"))
+    assert tr.column("time") == tr_ref.column("time")
+    kills = [e for grp in tr.meta["elastic_events"] for e in grp["events"]
+             if e["kind"] == "kill"]
+    assert len(kills) == 1 and kills[0]["lanes"][0]["lane"] == 2
+
+
+# ------------------------------------------------------------------ straggler
+def test_rebalance_migrates_backlog_and_serves_correct_data():
+    ds, _, _, _ = small_problem(n=256, d=4, seed=3)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    with make_dd(X, y, num_hosts=2, shard=16, capacity_slack=2.0) as dd:
+        ref = dd.ownership.partition((X, y))
+        dd.slow_host(1, 0.3)
+        # measure the slow pace with one resident expansion, then schedule
+        # the next window's loads and flush against a tight deadline
+        dd.begin_stage(64, 192)
+        moves = dd.rebalance_stragglers(64, 192, deadline_s=0.01)
+        assert moves and moves[0]["from_lane"] == 1
+        assert moves[0]["to_lane"] == 0
+        boundary = -(-64 // dd.ownership.shard_size)
+        assert all(s >= boundary for s in moves[0]["shards"])
+        # after migration the full window still serves the exact global
+        # prefix — migrated shards land in the fast lane, in order, and no
+        # stale in-flight load lands anywhere
+        hw = dd.window(256)
+        assert int(jnp.sum(hw.counts)) == 256
+        full = dd.ownership.partition((X, y))
+        for h in range(2):
+            m = int(hw.counts[h])
+            np.testing.assert_array_equal(np.asarray(hw.fields[0][h][:m]),
+                                          np.asarray(full.fields[0][h][:m]))
+        # every example still loaded exactly once, globally
+        assert sum(m.examples_loaded for m in dd.host_meters) == 256
+        # the initial (pre-delta) partition differs: shards really moved
+        assert dd.ownership.num_owned_examples(0) > \
+            int(np.asarray(ref.counts)[0])
+
+
+def test_rebalance_noop_without_backlog_or_deadline_pressure():
+    ds, _, _, _ = small_problem(n=128, d=4)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    with make_dd(X, y, num_hosts=2, shard=16) as dd:
+        dd.window(128)                       # fully resident: no backlog
+        assert dd.rebalance_stragglers(128, None, 0.01) == []
+        assert dd.rebalance_stragglers(64, 128, 1e9) == []
+
+
+# ------------------------------------------------------------------ fault plan
+def test_fault_plan_parse_and_validation():
+    plan = FaultPlan.parse(["kill@2:1", "slow@1:3=0.02", "rejoin@4:1"])
+    assert [e.kind for e in plan.events] == ["slow", "kill", "rejoin"]
+    assert plan.at(2)[0].host == 1
+    assert plan.at(1)[0].delay_s == pytest.approx(0.02)
+    assert not plan.at(3)
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultPlan.parse(["explode@1:0"])
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultPlan.parse(["kill@nonsense"])
+    with pytest.raises(ValueError):
+        FaultEvent(stage=-1, kind="kill", host=0)
+
+
+def test_elastic_engine_rejects_faults_on_plain_dataset():
+    ds, _, dobj, w0 = small_problem(n=96, d=4)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    faults = FaultPlan([FaultEvent(stage=0, kind="kill", host=1)])
+    with DistributedDataset([InMemoryShardStore(X, 16),
+                             InMemoryShardStore(y, 16)], num_hosts=2) as dd:
+        with pytest.raises(TypeError, match="ElasticDataset"):
+            ElasticBetEngine(faults=faults, **engine_kw()).run(
+                dd, NewtonCG(hessian_fraction=1.0), dobj,
+                FixedSteps(**POLICY_KW), w0=w0, eval_data=(ds.X, ds.y))
+
+
+# ----------------------------------------------------------- kill-and-resume
+class _Killed(Exception):
+    pass
+
+
+def _kill_resume(make_data, make_engine, obj, w0, opt, kill_stage, tmp_path,
+                 policy_cls=FixedSteps, policy_kw=POLICY_KW, eval_data=None):
+    ck = StageCheckpointer(str(tmp_path))
+
+    def die(end):
+        ck(end)
+        if end.info.stage == kill_stage:
+            raise _Killed
+
+    engine = make_engine()
+    engine.stage_callback = die
+    with make_data() as data:
+        with pytest.raises(_Killed):
+            engine.run(data, opt, obj, policy_cls(**policy_kw), w0=w0,
+                       clock=SimulatedClock(), eval_data=eval_data)
+    restored = ck.restore(w0, opt.init(w0))
+    assert restored is not None
+    assert restored.resume == ResumeState(
+        next_stage=kill_stage + 1,
+        step_count=restored.meta["cursor"]["step"],
+        stages=restored.meta["cursor"]["stages"],
+        transfers=restored.meta["cursor"]["transfers"])
+    clock = restored.restore_clock(SimulatedClock())
+    with make_data() as data:
+        rewarm = restored.restore_dataset(data)
+        tr = make_engine().run(
+            data, opt, obj, policy_cls(**policy_kw), w0=restored.params,
+            opt_state0=restored.opt_state, clock=clock, eval_data=eval_data,
+            resume=restored.resume)
+        meter_after = getattr(data, "meter", None)
+        loaded = meter_after.examples_loaded if meter_after else None
+    return restored, tr, rewarm, loaded
+
+
+def _stitch(restored, trace, col):
+    return [p[col] for p in restored.trace_points()] + trace.column(col)
+
+
+def test_kill_resume_single_host_bit_compatible(tmp_path):
+    ds, obj, _, w0 = small_problem()
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    opt = NewtonCG(hessian_fraction=1.0)
+
+    def plane():
+        return StreamingDataset([InMemoryShardStore(X, 32),
+                                 InMemoryShardStore(y, 32)])
+
+    with plane() as p:
+        tr_ref = BetEngine(**engine_kw()).run(
+            p, opt, obj, FixedSteps(**POLICY_KW), w0=w0,
+            clock=SimulatedClock(), eval_data=(ds.X, ds.y))
+    restored, tr, rewarm, loaded = _kill_resume(
+        plane, lambda: BetEngine(**engine_kw()), obj, w0, opt, 1, tmp_path,
+        eval_data=(ds.X, ds.y))
+    # stitched pre-kill + post-resume trajectory == uninterrupted, exactly
+    for col in ("f_window", "f_full"):
+        np.testing.assert_array_equal(_stitch(restored, tr, col),
+                                      tr_ref.column(col))
+    for col in ("step", "stage", "window", "time", "accesses"):
+        assert _stitch(restored, tr, col) == tr_ref.column(col)
+    # Thm 4.1 accounting intact: restored counters continue exactly (the
+    # resumed meter reads as if never interrupted); restart I/O is reported
+    # separately as the rewarm record
+    assert loaded == ds.n
+    assert rewarm["examples_loaded"] == restored.n_t
+    assert tr.meta["resumed_from_stage"] == 1
+
+
+def test_kill_resume_distributed_bit_compatible(tmp_path):
+    ds, _, dobj, w0 = small_problem()
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    opt = NewtonCG(hessian_fraction=1.0)
+
+    def data():
+        return make_dd(X, y, num_hosts=4, shard=32)
+
+    with data() as dd:
+        tr_ref = ElasticBetEngine(**engine_kw()).run(
+            dd, opt, dobj, FixedSteps(**POLICY_KW), w0=w0,
+            clock=SimulatedClock(), eval_data=(ds.X, ds.y))
+        ref_loads = [m.examples_loaded for m in dd.host_meters]
+    restored, tr, rewarm, _ = _kill_resume(
+        data, lambda: ElasticBetEngine(**engine_kw()), dobj, w0, opt, 2,
+        tmp_path, eval_data=(ds.X, ds.y))
+    for col in ("f_window", "f_full"):
+        np.testing.assert_array_equal(_stitch(restored, tr, col),
+                                      tr_ref.column(col))
+    assert _stitch(restored, tr, "time") == tr_ref.column("time")
+    assert _stitch(restored, tr, "accesses") == tr_ref.column("accesses")
+    assert rewarm["examples_loaded"] == restored.n_t
+
+
+def test_kill_resume_two_track(tmp_path):
+    ds, obj, _, w0 = small_problem(n=256, d=16)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    opt = NewtonCG(hessian_fraction=1.0)
+    kw = dict(final_steps=4, max_stage_iters=40)
+
+    def plane():
+        return StreamingDataset([InMemoryShardStore(X, 32),
+                                 InMemoryShardStore(y, 32)])
+
+    with plane() as p:
+        tr_ref = BetEngine(schedule=BETSchedule(n0=64)).run(
+            p, opt, obj, TwoTrack(**kw), w0=w0, clock=SimulatedClock(),
+            eval_data=(ds.X, ds.y))
+    restored, tr, _, _ = _kill_resume(
+        plane, lambda: BetEngine(schedule=BETSchedule(n0=64)), obj, w0, opt,
+        1, tmp_path, policy_cls=TwoTrack, policy_kw=kw,
+        eval_data=(ds.X, ds.y))
+    for col in ("f_window", "f_full"):
+        np.testing.assert_array_equal(_stitch(restored, tr, col),
+                                      tr_ref.column(col))
+    assert _stitch(restored, tr, "time") == tr_ref.column("time")
+
+
+def test_checkpoint_restores_elastic_ownership_deltas(tmp_path):
+    """A checkpoint taken after an ownership delta must restore lanes under
+    the *mutated* ownership, not the strategy default."""
+    ds, _, _, _ = small_problem(n=256, d=4, seed=3)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    with make_dd(X, y, num_hosts=2, shard=16, capacity_slack=2.0) as dd:
+        dd.slow_host(1, 0.3)
+        dd.begin_stage(64, 192)
+        assert dd.rebalance_stragglers(64, 192, deadline_s=0.01)
+        dd.window(192)
+        state = dataset_state(dd)
+        hw_ref = dd.window(192)
+        counts_ref = np.asarray(hw_ref.counts).copy()
+        fields_ref = np.asarray(hw_ref.fields[0]).copy()
+    with make_dd(X, y, num_hosts=2, shard=16, capacity_slack=2.0) as dd2:
+        restore_dataset(dd2, state, 192)
+        assert dd2.ownership.owned_shards(0).tolist() == \
+            state["elastic"]["owned_shards"][0]
+        hw = dd2.window(192)
+        np.testing.assert_array_equal(np.asarray(hw.counts), counts_ref)
+        np.testing.assert_array_equal(np.asarray(hw.fields[0]), fields_ref)
+        # meters restored to the checkpointed counters, not the rewarm's
+        assert [m.examples_loaded for m in dd2.host_meters] == \
+            [s["examples_loaded"] for s in state["host_meters"]]
+
+
+def test_restore_rejects_mismatched_configuration(tmp_path):
+    """Resuming under different flags must fail loudly, not silently
+    corrupt counters or overflow lanes mid-expansion."""
+    ds, _, _, _ = small_problem(n=256, d=4, seed=3)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    # checkpoint a rebalanced run (a lane grew past the striped max)...
+    with make_dd(X, y, num_hosts=2, shard=16, capacity_slack=2.0) as dd:
+        dd.slow_host(1, 0.3)
+        dd.begin_stage(64, 192)
+        assert dd.rebalance_stragglers(64, 192, deadline_s=0.01)
+        dd.window(192)
+        state = dataset_state(dd)
+    # ...then resume without the slack: clear error, not a lane overflow
+    with make_dd(X, y, num_hosts=2, shard=16, capacity_slack=1.0) as dd2:
+        with pytest.raises(ValueError, match="capacity_slack"):
+            restore_dataset(dd2, state, 192)
+    # distributed checkpoint into a streaming dataset: kind mismatch
+    with StreamingDataset([InMemoryShardStore(X, 16),
+                           InMemoryShardStore(y, 16)]) as plane:
+        with pytest.raises(ValueError, match="distributed"):
+            restore_dataset(plane, state, 192)
+    # same kind but different sharding: the rewarmed residency overshoots
+    # the checkpointed cursor (shard 16 rounds 200 up to 208, shard 48 to
+    # 240 — the "resident prefix" would silently disagree)
+    with StreamingDataset([InMemoryShardStore(X, 16),
+                           InMemoryShardStore(y, 16)]) as plane:
+        plane.window(200)
+        stream_state = dataset_state(plane)
+    with StreamingDataset([InMemoryShardStore(X, 48),
+                           InMemoryShardStore(y, 48)]) as plane2:
+        with pytest.raises(ValueError, match="overshoots"):
+            restore_dataset(plane2, stream_state, 200)
+
+
+def test_train_cli_validates_elastic_flags():
+    from repro import configs
+    from repro.launch.train import TrainConfig, train_lm
+    cfg = configs.reduced(configs.get("qwen3-0.6b"))
+    with pytest.raises(ValueError, match="hosts"):
+        train_lm(cfg, TrainConfig(kill_host_at="1:0", num_hosts=1))
+    with pytest.raises(ValueError, match="hosts"):
+        train_lm(cfg, TrainConfig(straggler_deadline_s=0.1, num_hosts=1))
+    with pytest.raises(ValueError, match="ckpt-dir"):
+        train_lm(cfg, TrainConfig(resume=True))
+
+
+def test_stage_checkpointer_rolls_and_thins(tmp_path):
+    ds, obj, _, w0 = small_problem(n=96, d=4)
+    X, y = np.asarray(ds.X), np.asarray(ds.y)
+    ck = StageCheckpointer(str(tmp_path), keep=2, every=1)
+    with StreamingDataset([InMemoryShardStore(X, 16),
+                           InMemoryShardStore(y, 16)]) as p:
+        BetEngine(schedule=BETSchedule(n0=24), stage_callback=ck).run(
+            p, NewtonCG(hessian_fraction=1.0), obj,
+            FixedSteps(inner_steps=1, final_steps=1), w0=w0,
+            eval_data=(ds.X, ds.y))
+    assert len(list(tmp_path.glob("stage_*.npz"))) == 2   # rolled
+    assert ck.latest().name == f"stage_{max(ck.saved):04d}"
+    with pytest.raises(ValueError):
+        StageCheckpointer(str(tmp_path), keep=0)
