@@ -5,12 +5,24 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import BETSchedule, SimulatedClock, run_bet_fixed
+from repro.api import (DataSpec, PolicySpec, RunSpec, ScheduleSpec, build,
+                       optimizer_spec_of)
 
 from . import common
 from .common import emit, fmt
 
 TOL = 0.02
+
+
+def _run_fixed(ds, opt, *, n0: int, growth: float = 2.0):
+    return build(RunSpec(
+        data=DataSpec.from_dict(ds.spec),
+        policy=PolicySpec("fixed_steps", {"inner_steps": 5,
+                                          "final_steps": 25}),
+        optimizer=optimizer_spec_of(opt),
+        schedule=ScheduleSpec(n0=n0, growth=growth,
+                              clock=common.clock_params(common.clock())),
+    )).run()
 
 
 def main() -> None:
@@ -19,10 +31,7 @@ def main() -> None:
 
     times_b = {}
     for b in (1.5, 2.0, 3.0):
-        tr = run_bet_fixed(ds, opt, obj,
-                           schedule=BETSchedule(n0=256, growth=b),
-                           inner_steps=5, final_steps=25,
-                           clock=common.clock(), w0=w0)
+        tr = _run_fixed(ds, opt, n0=256, growth=b)
         times_b[b] = common.time_to_rfvd(tr, f_star, TOL)
         emit(f"ablation/growth{b:g}", 0.0, f"sim_time={fmt(times_b[b])}")
     finite = [t for t in times_b.values() if np.isfinite(t)]
@@ -32,9 +41,7 @@ def main() -> None:
 
     times_n = {}
     for n0 in (128, 512, 2048):
-        tr = run_bet_fixed(ds, opt, obj, schedule=BETSchedule(n0=n0),
-                           inner_steps=5, final_steps=25,
-                           clock=common.clock(), w0=w0)
+        tr = _run_fixed(ds, opt, n0=n0)
         times_n[n0] = common.time_to_rfvd(tr, f_star, TOL)
         emit(f"ablation/n0_{n0}", 0.0, f"sim_time={fmt(times_n[n0])}")
     finite = [t for t in times_n.values() if np.isfinite(t)]

@@ -31,22 +31,10 @@ import time
 
 import numpy as np
 
-from repro.core import BETSchedule, BetEngine, FixedSteps, SimulatedClock
-from repro.data import (DataAccessMeter, MemmapShardStore, StreamingDataset,
-                        ThrottledStore)
+from repro.api import (DataSpec, PolicySpec, RunSpec, ScheduleSpec, build,
+                       optimizer_spec_of)
 
 from . import common
-
-
-def build_plane(ds, shard_size: int, delay_s: float, workdir: str):
-    """Write the pre-permuted (X, y) to per-shard .npy files and open them
-    as a throttled streaming plane."""
-    sx = MemmapShardStore.write(np.asarray(ds.X), f"{workdir}/X", shard_size)
-    sy = MemmapShardStore.write(np.asarray(ds.y), f"{workdir}/y", shard_size)
-    meter = DataAccessMeter()
-    plane = StreamingDataset([ThrottledStore(sx, delay_s),
-                              ThrottledStore(sy, delay_s)], meter=meter)
-    return plane, meter
 
 
 def instrument_stages(plane, meter):
@@ -79,28 +67,27 @@ def main() -> None:
     args, _ = ap.parse_known_args()     # tolerate benchmarks.run's selectors
 
     ds, obj, w0, _ = common.setup(args.dataset, scale=args.scale)
-    sched = BETSchedule(n0=max(128, min(ds.d, ds.n // 8)))
-    policy_kw = dict(inner_steps=5, final_steps=25)
-    engine = BetEngine(schedule=sched)
-    opt = common.default_newton(ds)
-    eval_data = (ds.X, ds.y)
+    n0 = max(128, min(ds.d, ds.n // 8))
+    policy = PolicySpec("fixed_steps", {"inner_steps": 5, "final_steps": 25})
+    opt_spec = optimizer_spec_of(common.default_newton(ds))
 
     # reference run: the host-slice Dataset.window path (also the warmup
     # that compiles the stage kernels both runs share)
-    tr_host = engine.run(ds, opt, obj, FixedSteps(**policy_kw), w0=w0,
-                         clock=SimulatedClock(), eval_data=eval_data)
+    tr_host = common.run_method("bet_fixed", ds, obj, w0, n0=n0)
 
     with tempfile.TemporaryDirectory() as td:
-        plane, meter = build_plane(ds, args.shard_size,
-                                   args.delay_ms * 1e-3, td)
+        # the same workload through the throttled memmap streaming plane:
+        # one spec field flip plus the storage knobs
+        session = build(RunSpec(
+            data=DataSpec.from_dict(ds.spec).replace(
+                plane="plane", store="memmap", workdir=td,
+                shard_size=args.shard_size, delay_ms=args.delay_ms),
+            policy=policy, optimizer=opt_spec,
+            schedule=ScheduleSpec(n0=n0)))
+        plane, meter = session.dataset, session.dataset.meter
         stage_log = instrument_stages(plane, meter)
         t0 = time.perf_counter()
-        try:
-            tr_plane = engine.run(plane, opt, obj, FixedSteps(**policy_kw),
-                                  w0=w0, clock=SimulatedClock(),
-                                  eval_data=eval_data)
-        finally:
-            plane.close()
+        tr_plane = session.run()
         wall = time.perf_counter() - t0
 
     fw_h = np.asarray(tr_host.column("f_window"))

@@ -38,12 +38,8 @@ import time
 
 import numpy as np
 
-from repro.core import BETSchedule, BetEngine, FixedSteps, SimulatedClock
-from repro.data import MemmapShardStore, ThrottledStore
-from repro.dist import (DistributedBetEngine, DistributedDataset,
-                        SimulatedTopology, distributed_objective,
-                        l2_regularizer)
-from repro.models.linear import make_example_losses
+from repro.api import (DataSpec, OptimizerSpec, PolicySpec, RunSpec,
+                       ScheduleSpec, TopologySpec, build)
 from repro.optim import NewtonCG
 
 from . import common
@@ -94,44 +90,39 @@ def main() -> None:
     args, _ = ap.parse_known_args()     # tolerate benchmarks.run's selectors
 
     ds, obj, w0, _ = common.setup(args.dataset, scale=args.scale, lam=LAM)
-    sched = BETSchedule(n0=max(128, min(ds.d, ds.n // 8)))
-    policy_kw = dict(inner_steps=5, final_steps=25)
+    n0 = max(128, min(ds.d, ds.n // 8))
+    policy = PolicySpec("fixed_steps", {"inner_steps": 5, "final_steps": 25})
     # hessian_fraction=1.0: the subsample is the identity on both layouts,
     # so the only distributed/single-host difference is psum reassociation
-    opt = NewtonCG(hessian_fraction=1.0)
-    eval_data = (ds.X, ds.y)
+    opt_spec = OptimizerSpec("newton_cg", {"hessian_fraction": 1.0})
 
     # single-host reference (host-slice window path)
-    tr_host = BetEngine(schedule=sched).run(
-        ds, opt, obj, FixedSteps(**policy_kw), w0=w0,
-        clock=SimulatedClock(), eval_data=eval_data)
+    tr_host = common.run_method("bet_fixed", ds, obj, w0, n0=n0,
+                                opt=NewtonCG(hessian_fraction=1.0))
 
-    topology = SimulatedTopology(args.hosts)
-    dobj = distributed_objective(make_example_losses("squared_hinge"),
-                                 regularizer=l2_regularizer(LAM))
     with tempfile.TemporaryDirectory() as td:
-        sx = MemmapShardStore.write(np.asarray(ds.X), f"{td}/X",
-                                    args.shard_size)
-        sy = MemmapShardStore.write(np.asarray(ds.y), f"{td}/y",
-                                    args.shard_size)
-        delay = args.delay_ms * 1e-3
-        dd = DistributedDataset(
-            [ThrottledStore(sx, delay), ThrottledStore(sy, delay)],
-            topology=topology)
-        clock = SimulatedClock()
+        # the identical workload over N simulated hosts: one TopologySpec
+        # away from the single-host spec (the session composes the owned
+        # throttled memmap stores, the stacked window, and the collective
+        # psum objective)
+        session = build(RunSpec(
+            data=DataSpec.from_dict(ds.spec).replace(
+                plane="plane", store="memmap", workdir=td,
+                shard_size=args.shard_size, delay_ms=args.delay_ms),
+            policy=policy, optimizer=opt_spec,
+            schedule=ScheduleSpec(n0=n0),
+            topology=TopologySpec(hosts=args.hosts)))
+        dd = session.dataset
+        topology = dd.topology
         t0 = time.perf_counter()
-        try:
-            tr_dist = DistributedBetEngine(schedule=sched).run(
-                dd, opt, dobj, FixedSteps(**policy_kw), w0=w0,
-                clock=clock, eval_data=eval_data)
-        finally:
-            dd.close()
+        tr_dist = session.run()
         wall = time.perf_counter() - t0
         per_host_loaded = [dd.host_meters[h].examples_loaded
                            for h in range(args.hosts)]
         owned = [dd.ownership.num_owned_examples(h)
                  for h in range(args.hosts)]
         global_meter = dd.meter.snapshot()
+        sx, sy = dd.stores
 
     fw_h = np.asarray(tr_host.column("f_window"))
     fw_d = np.asarray(tr_dist.column("f_window"))

@@ -1,6 +1,8 @@
 """Elastic fault-tolerance benchmark on the Fig. 3 workload (simulated hosts).
 
-Four scenarios over the Alg. 1/3 driver, each asserting the recovery
+Four scenarios over the Alg. 1/3 driver — every stack spec-built through
+``repro.api.build(RunSpec)`` (the fault plan, straggler deadline and
+checkpoint cadence are all spec fields) — each asserting the recovery
 contract that follows from §3.3 (the window is a prefix of one fixed
 permutation, so ``(t, n_t)`` + the ownership map determine exactly what a
 recovery must re-read):
@@ -34,13 +36,9 @@ import tempfile
 
 import numpy as np
 
-from repro.core import BETSchedule, BetEngine, FixedSteps, SimulatedClock
-from repro.data import InMemoryShardStore, StreamingDataset
-from repro.dist import distributed_objective, l2_regularizer
-from repro.elastic import (ElasticBetEngine, ElasticDataset, FaultEvent,
-                           FaultPlan, StageCheckpointer)
-from repro.models.linear import make_example_losses
-from repro.optim import NewtonCG
+from repro.api import (CheckpointSpec, DataSpec, ElasticSpec, OptimizerSpec,
+                       PolicySpec, RunSpec, ScheduleSpec, TopologySpec,
+                       build)
 
 from . import common
 from .bench_dist import stage_deltas
@@ -64,44 +62,30 @@ def _stitched(restored, trace, col):
     return [p[col] for p in restored.trace_points()] + trace.column(col)
 
 
-def _run_resume_scenario(make_data, make_engine, run_kw, kill_stage,
-                         tr_ref) -> dict:
+def _run_resume_scenario(spec: RunSpec, kill_stage: int, tr_ref) -> dict:
     """Kill at ``kill_stage`` (post-checkpoint), restore, resume, stitch."""
-    w0 = run_kw["w0"]
-    opt = run_kw["optimizer"]
     with tempfile.TemporaryDirectory() as td:
-        ck = StageCheckpointer(td)
+        ckpt = spec.replace(checkpoint=CheckpointSpec(directory=td))
+        session = build(ckpt)
 
         def die(end):
-            ck(end)
+            # runs after the session's checkpointer: the stage's
+            # checkpoint is on disk when the crash lands
             if end.info.stage == kill_stage:
                 raise _Killed
 
-        engine = make_engine()
-        engine.stage_callback = die
-        data = make_data()
+        session.on_stage(die)
         try:
-            engine.run(data, opt, run_kw["objective"], FixedSteps(
-                **run_kw["policy_kw"]), w0=w0, clock=SimulatedClock(),
-                eval_data=run_kw["eval_data"])
+            session.run()
             raise RuntimeError(f"kill at stage {kill_stage} never fired")
         except _Killed:
             pass
-        finally:
-            data.close()
 
-        restored = ck.restore(w0, opt.init(w0))
-        clock = restored.restore_clock(SimulatedClock())
-        data = make_data()
-        try:
-            rewarm = restored.restore_dataset(data)
-            tr_b = make_engine().run(
-                data, opt, run_kw["objective"],
-                FixedSteps(**run_kw["policy_kw"]), w0=restored.params,
-                opt_state0=restored.opt_state, clock=clock,
-                eval_data=run_kw["eval_data"], resume=restored.resume)
-        finally:
-            data.close()
+        resumed = build(ckpt.replace(
+            checkpoint=CheckpointSpec(directory=td, resume=True)))
+        tr_b = resumed.run()
+        restored = resumed.restored
+        rewarm = tr_b.meta["resume_rewarm"]
 
     dev = max(_rel_dev(_stitched(restored, tr_b, c), tr_ref.column(c))
               for c in ("f_window", "f_full"))
@@ -137,105 +121,86 @@ def main() -> None:
     args, _ = ap.parse_known_args()     # tolerate benchmarks.run's selectors
 
     ds, obj, w0, _ = common.setup(args.dataset, scale=args.scale, lam=LAM)
-    X, y = np.asarray(ds.X), np.asarray(ds.y)
-    sched = BETSchedule(n0=max(128, min(ds.d, ds.n // 8)))
-    policy_kw = dict(inner_steps=3, final_steps=8)
-    opt = NewtonCG(hessian_fraction=1.0)
-    dobj = distributed_objective(make_example_losses("squared_hinge"),
-                                 regularizer=l2_regularizer(LAM))
-    eval_data = (ds.X, ds.y)
-    row_bytes = X.dtype.itemsize * ds.d + y.dtype.itemsize
+    n0 = max(128, min(ds.d, ds.n // 8))
+    row_bytes = np.asarray(ds.X).dtype.itemsize * ds.d + \
+        np.asarray(ds.y).dtype.itemsize
 
-    def plane():
-        return StreamingDataset([InMemoryShardStore(X, args.shard_size),
-                                 InMemoryShardStore(y, args.shard_size)])
-
-    def dist_data(**kw):
-        return ElasticDataset([InMemoryShardStore(X, args.shard_size),
-                               InMemoryShardStore(y, args.shard_size)],
-                              num_hosts=args.hosts, **kw)
+    base = dict(
+        policy=PolicySpec("fixed_steps", {"inner_steps": 3,
+                                          "final_steps": 8}),
+        optimizer=OptimizerSpec("newton_cg", {"hessian_fraction": 1.0}),
+        schedule=ScheduleSpec(n0=n0))
+    plane_data = DataSpec.from_dict(ds.spec).replace(
+        plane="plane", shard_size=args.shard_size)
+    spec_single = RunSpec(data=plane_data, **base)
+    spec_dist = RunSpec(data=plane_data,
+                        topology=TopologySpec(hosts=args.hosts),
+                        elastic=ElasticSpec(enabled=True), **base)
 
     # uninterrupted references
-    with plane() as p:
-        tr_single = BetEngine(schedule=sched).run(
-            p, opt, obj, FixedSteps(**policy_kw), w0=w0,
-            clock=SimulatedClock(), eval_data=eval_data)
-    with dist_data() as dd:
-        tr_dist = ElasticBetEngine(schedule=sched).run(
-            dd, opt, dobj, FixedSteps(**policy_kw), w0=w0,
-            clock=SimulatedClock(), eval_data=eval_data)
+    tr_single = build(spec_single).run()
+    tr_dist = build(spec_dist).run()
 
     # ---------------------------------------------- kill + resume parity
-    resume_single = _run_resume_scenario(
-        plane, lambda: BetEngine(schedule=sched),
-        dict(w0=w0, optimizer=opt, objective=obj, policy_kw=policy_kw,
-             eval_data=eval_data),
-        args.kill_stage, tr_single)
-    resume_dist = _run_resume_scenario(
-        dist_data, lambda: ElasticBetEngine(schedule=sched),
-        dict(w0=w0, optimizer=opt, objective=dobj, policy_kw=policy_kw,
-             eval_data=eval_data),
-        args.kill_stage, tr_dist)
+    resume_single = _run_resume_scenario(spec_single, args.kill_stage,
+                                         tr_single)
+    resume_dist = _run_resume_scenario(spec_dist, args.kill_stage, tr_dist)
 
     # ------------------------------------------------- in-run host loss
-    faults = FaultPlan([FaultEvent(stage=args.kill_stage, kind="kill",
-                                   host=args.kill_host)])
-    with dist_data() as dd:
-        eng = ElasticBetEngine(schedule=sched, faults=faults)
-        tr_loss = eng.run(dd, opt, dobj, FixedSteps(**policy_kw), w0=w0,
-                          clock=SimulatedClock(), eval_data=eval_data)
-        lanes = [ev for grp in tr_loss.meta["elastic_events"]
-                 for e in grp["events"] if e["kind"] == "kill"
-                 for ev in e["lanes"]]
-        lost = lanes[0]
-        # per-stage re-upload accounting from the collective stage records:
-        # a surviving lane never re-uploads a resident byte at any stage;
-        # only the rebuilt lane's recovery stage legitimately re-uploads
-        # (its lane memory died with the host)
-        deltas = stage_deltas(tr_loss, row_bytes)
-        survivor_reupload = sum(
-            h["reupload_bytes"] for s in deltas for h in s["hosts"]
-            if h["host"] != lost["lane"])
-        host_loss = {
-            "kill_stage": args.kill_stage, "lost_host": args.kill_host,
-            "lane": lost["lane"], "adopted_by": lost["adopted_by"],
-            "window_at_loss": lost["window"],
-            "reread_examples": lost["reread_examples"],
-            "reread_bytes": lost["reread_bytes"],
-            "owned_examples": lost["owned_examples"],
-            "owned_bytes": lost["owned_examples"] * row_bytes,
-            "survivor_reupload_bytes_all_stages": survivor_reupload,
-            "trajectory_max_rel_dev": max(
-                _rel_dev(tr_loss.column(c), tr_dist.column(c))
-                for c in ("f_window", "f_full")),
-        }
+    session = build(spec_dist.replace(elastic=ElasticSpec(
+        faults=(f"kill@{args.kill_stage}:{args.kill_host}",))))
+    tr_loss = session.run()
+    lanes = [ev for grp in tr_loss.meta["elastic_events"]
+             for e in grp["events"] if e["kind"] == "kill"
+             for ev in e["lanes"]]
+    lost = lanes[0]
+    # per-stage re-upload accounting from the collective stage records:
+    # a surviving lane never re-uploads a resident byte at any stage;
+    # only the rebuilt lane's recovery stage legitimately re-uploads
+    # (its lane memory died with the host)
+    deltas = stage_deltas(tr_loss, row_bytes)
+    survivor_reupload = sum(
+        h["reupload_bytes"] for s in deltas for h in s["hosts"]
+        if h["host"] != lost["lane"])
+    host_loss = {
+        "kill_stage": args.kill_stage, "lost_host": args.kill_host,
+        "lane": lost["lane"], "adopted_by": lost["adopted_by"],
+        "window_at_loss": lost["window"],
+        "reread_examples": lost["reread_examples"],
+        "reread_bytes": lost["reread_bytes"],
+        "owned_examples": lost["owned_examples"],
+        "owned_bytes": lost["owned_examples"] * row_bytes,
+        "survivor_reupload_bytes_all_stages": survivor_reupload,
+        "trajectory_max_rel_dev": max(
+            _rel_dev(tr_loss.column(c), tr_dist.column(c))
+            for c in ("f_window", "f_full")),
+    }
 
     # ------------------------------------------------------- straggler
-    slow = FaultPlan([FaultEvent(stage=0, kind="slow", host=args.slow_host,
-                                 delay_s=args.slow_s)])
-    with dist_data(capacity_slack=2.0) as dd:
-        eng = ElasticBetEngine(schedule=sched, faults=slow,
-                               deadline_s=args.deadline_ms * 1e-3)
-        tr_strag = eng.run(dd, opt, dobj, FixedSteps(**policy_kw), w0=w0,
-                           clock=SimulatedClock(), eval_data=eval_data)
-        moves = [e for grp in tr_strag.meta.get("elastic_events", [])
-                 for e in grp["events"] if e["kind"] == "rebalance"]
-        per_lane_loaded = [m.examples_loaded for m in dd.host_meters]
-        windows_partition = all(
-            sum(r["window"] for r in rec["hosts"]) == rec["n_t"]
-            for rec in tr_strag.meta["host_stage_records"])
-        straggler = {
-            "slow_host": args.slow_host, "slow_s": args.slow_s,
-            "deadline_ms": args.deadline_ms,
-            "rebalances": moves,
-            "shards_migrated": sum(len(m["shards"]) for m in moves),
-            "per_lane_examples_loaded": per_lane_loaded,
-            "total_examples_loaded": sum(per_lane_loaded),
-            "windows_partition_every_stage": bool(windows_partition),
-            "trajectory_max_rel_dev": max(
-                _rel_dev(tr_strag.column(c), tr_dist.column(c))
-                for c in ("f_window", "f_full")),
-        }
+    session = build(spec_dist.replace(elastic=ElasticSpec(
+        faults=(f"slow@0:{args.slow_host}={args.slow_s}",),
+        straggler_deadline_s=args.deadline_ms * 1e-3,
+        capacity_slack=2.0)))
+    dd = session.dataset
+    tr_strag = session.run()
+    moves = [e for grp in tr_strag.meta.get("elastic_events", [])
+             for e in grp["events"] if e["kind"] == "rebalance"]
+    per_lane_loaded = [m.examples_loaded for m in dd.host_meters]
+    windows_partition = all(
+        sum(r["window"] for r in rec["hosts"]) == rec["n_t"]
+        for rec in tr_strag.meta["host_stage_records"])
+    straggler = {
+        "slow_host": args.slow_host, "slow_s": args.slow_s,
+        "deadline_ms": args.deadline_ms,
+        "rebalances": moves,
+        "shards_migrated": sum(len(m["shards"]) for m in moves),
+        "per_lane_examples_loaded": per_lane_loaded,
+        "total_examples_loaded": sum(per_lane_loaded),
+        "windows_partition_every_stage": bool(windows_partition),
+        "trajectory_max_rel_dev": max(
+            _rel_dev(tr_strag.column(c), tr_dist.column(c))
+            for c in ("f_window", "f_full")),
+    }
 
     report = {
         "workload": f"fig3/{args.dataset}", "n": ds.n, "d": ds.d,

@@ -23,15 +23,16 @@ import argparse
 import json
 import time
 
-from repro.core import (BETSchedule, SimulatedClock, legacy, run_batch,
-                        run_bet_fixed, run_two_track)
+from repro.core import BETSchedule, SimulatedClock, legacy
 
 from . import common
 
+# engine side: the spec-built session path (common.run_method); legacy
+# side: the preserved host loops, called directly
 DRIVERS = {
-    "bet_fixed": (run_bet_fixed, legacy.run_bet_fixed),
-    "two_track": (run_two_track, legacy.run_two_track),
-    "batch": (run_batch, legacy.run_batch),
+    "bet_fixed": ("bet_fixed", legacy.run_bet_fixed),
+    "two_track": ("bet", legacy.run_two_track),
+    "batch": ("batch", legacy.run_batch),
 }
 
 
@@ -44,21 +45,30 @@ def _kwargs(method: str, sched: BETSchedule) -> dict:
 
 
 def bench_method(method: str, ds, obj, w0, sched: BETSchedule) -> dict:
-    engine_fn, legacy_fn = DRIVERS[method]
+    spec_method, legacy_fn = DRIVERS[method]
     kw = _kwargs(method, sched)
 
-    def timed(fn):
-        fn(ds, common.default_newton(ds), obj,
-           clock=SimulatedClock(), w0=w0, **kw)          # warmup / compile
+    def timed_legacy():
+        legacy_fn(ds, common.default_newton(ds), obj,
+                  clock=SimulatedClock(), w0=w0, **kw)   # warmup / compile
         t0 = time.perf_counter()
-        tr = fn(ds, common.default_newton(ds), obj,
-                clock=SimulatedClock(), w0=w0, **kw)
+        tr = legacy_fn(ds, common.default_newton(ds), obj,
+                       clock=SimulatedClock(), w0=w0, **kw)
+        return tr, time.perf_counter() - t0
+
+    def timed_engine():
+        run_kw = dict(inner_steps=5, final_steps=25) \
+            if method != "batch" else dict(steps=30)
+        common.run_method(spec_method, ds, obj, w0, n0=sched.n0, **run_kw)
+        t0 = time.perf_counter()
+        tr = common.run_method(spec_method, ds, obj, w0, n0=sched.n0,
+                               **run_kw)
         return tr, time.perf_counter() - t0
 
     legacy.reset_host_pulls()
-    tr_l, wall_l = timed(legacy_fn)
+    tr_l, wall_l = timed_legacy()
     pulls_l = legacy.host_pulls() // 2                   # warmup + timed run
-    tr_e, wall_e = timed(engine_fn)
+    tr_e, wall_e = timed_engine()
     stages = tr_e.meta["stages"]
     transfers = tr_e.meta["host_transfers"]
     # syncs per *inner-stage* step: the two-track final phase pulls once per

@@ -1,17 +1,25 @@
-"""Shared benchmark utilities: method drivers, tolerance sweeps, CSV rows."""
+"""Shared benchmark utilities: spec-built method drivers, tolerance sweeps,
+CSV rows.
+
+Fixtures and BET stacks are composed exclusively through the declarative
+API (``repro.api.build(RunSpec)``): ``setup`` materializes a convex
+workload from a ``DataSpec`` (the returned Dataset carries it as
+``ds.spec``), and ``run_method`` translates a method name + knobs into a
+``RunSpec`` and runs the session.  The non-BET baselines (DSM, mini-batch
+AdaGrad) keep their dedicated drivers — they are comparison points, not
+BET stacks.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import (BETSchedule, SimulatedClock, run_batch, run_bet_fixed,
-                        run_dsm, run_gradient_variance, run_minibatch,
-                        run_two_track)
-from repro.data.synthetic import load
-from repro.models.linear import (accuracy, init_params, make_objective,
-                                 solve_reference)
-from repro.optim import Adagrad, NewtonCG, NonlinearCG, LBFGS
+from repro.api import (DataSpec, PolicySpec, RunSpec, ScheduleSpec, build,
+                       convex_problem, optimizer_spec_of)
+from repro.core import SimulatedClock, run_dsm, run_minibatch
+from repro.models.linear import solve_reference
+from repro.optim import Adagrad, NewtonCG
 
 ROWS: list[str] = []
 
@@ -23,17 +31,16 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 
 
 def setup(dataset: str, scale: float = 0.125, lam: float = 1e-3,
-          loss: str = "squared_hinge", condition_boost: bool = False):
-    if condition_boost:
-        from repro.data.synthetic import PAPER_LIKE, make_classification
-        cfg = dict(PAPER_LIKE[dataset]); cfg["n"] = max(64, int(cfg["n"] * scale))
-        cfg["condition"] = cfg.get("condition", 10.0) * 10
-        ds = make_classification(dataset, seed=0, **cfg)
-    else:
-        ds = load(dataset, scale=scale)
-    obj = make_objective(loss, lam=lam)
-    w0 = init_params(ds.d)
-    _, f_star = solve_reference(obj, w0, (ds.X, ds.y), steps=60)
+          loss: str = "squared_hinge", condition_boost: bool = False,
+          generator: dict | None = None, ref_steps: int = 60):
+    """The convex fixture, built through the declarative API.  The
+    returned Dataset carries its DataSpec (``ds.spec``), so ``run_method``
+    rebuilds the exact workload from the spec alone."""
+    spec = DataSpec(dataset=dataset, scale=scale, lam=lam, loss=loss,
+                    condition_boost=condition_boost,
+                    generator=generator or ())
+    ds, obj, w0 = convex_problem(spec)
+    _, f_star = solve_reference(obj, w0, (ds.X, ds.y), steps=ref_steps)
     return ds, obj, w0, float(f_star)
 
 
@@ -42,6 +49,12 @@ def clock(**kw) -> SimulatedClock:
     base = dict(p=10.0, a=1.0, s=5.0)
     base.update(kw)
     return SimulatedClock(**base)
+
+
+def clock_params(clk: SimulatedClock) -> dict:
+    """A fresh clock's parameters as ScheduleSpec.clock (used clocks are
+    rejected — their elapsed state is not expressible in a spec)."""
+    return clk.spec_params()
 
 
 def default_newton(ds) -> NewtonCG:
@@ -54,28 +67,25 @@ def default_newton(ds) -> NewtonCG:
 def run_method(method: str, ds, obj, w0, *, clk=None, opt=None,
                theta: float = 0.2, n0: int | None = None, steps: int = 30,
                inner_steps: int = 5, final_steps: int = 25):
+    """Run one named method over a ``setup()`` fixture.
+
+    The spec-built methods rebuild the objective and the zero start point
+    from ``ds.spec`` — ``obj``/``w0`` must be the fixture's own (the
+    signature keeps them so the non-BET baselines and the legacy call
+    shape still work); a non-zero ``w0`` is rejected rather than silently
+    ignored."""
     clk = clk if clk is not None else clock()
     opt = opt or default_newton(ds)
+    if w0 is not None and np.any(np.asarray(w0)):
+        raise ValueError(
+            "run_method starts from init_params (zeros) via the RunSpec; "
+            "custom starting points need repro.api.build directly")
     if n0 is None:
         # initial window large enough that the first-stage objective is not
         # rank-deficient (windows < d make early Newton stages wasteful; the
         # paper's datasets satisfy n0 << d-free regimes differently)
         n0 = max(128, min(ds.d, ds.n // 8))
-    sched = BETSchedule(n0=n0)
-    if method == "bet":
-        return run_two_track(ds, opt, obj, schedule=sched,
-                             final_steps=final_steps, clock=clk, w0=w0)
-    if method == "bet_fixed":
-        return run_bet_fixed(ds, opt, obj, schedule=sched,
-                             inner_steps=inner_steps,
-                             final_steps=final_steps, clock=clk, w0=w0)
-    if method == "batch":
-        return run_batch(ds, opt, obj, steps=steps, clock=clk, w0=w0)
-    if method == "bet_gradvar":
-        # beyond-paper: the DSM norm test driving BET's expanding window
-        return run_gradient_variance(ds, opt, obj, schedule=sched,
-                                     theta=theta, final_steps=final_steps,
-                                     clock=clk, w0=w0)
+    # non-BET baselines: dedicated drivers, not engine policies
     if method == "dsm":
         return run_dsm(ds, opt, obj, theta=theta, n0=n0, steps=steps,
                        clock=clk, w0=w0)
@@ -83,7 +93,27 @@ def run_method(method: str, ds, obj, w0, *, clk=None, opt=None,
         return run_minibatch(ds, Adagrad(lr=0.5), obj, batch_size=64,
                              steps=steps * 40, clock=clk, w0=w0,
                              record_every=20)
-    raise ValueError(method)
+    policies = {
+        "bet": PolicySpec("two_track", {"final_steps": final_steps}),
+        "bet_fixed": PolicySpec("fixed_steps",
+                                {"inner_steps": inner_steps,
+                                 "final_steps": final_steps}),
+        "batch": PolicySpec("batch", {"steps": steps}),
+        "bet_gradvar": PolicySpec("gradient_variance",
+                                  {"theta": theta,
+                                   "final_steps": final_steps}),
+    }
+    if method not in policies:
+        raise ValueError(method)
+    if ds.spec is None:
+        raise ValueError(
+            "run_method rebuilds the workload from its DataSpec: build the "
+            "fixture through common.setup / repro.api.convex_problem")
+    spec = RunSpec(data=DataSpec.from_dict(ds.spec),
+                   policy=policies[method],
+                   optimizer=optimizer_spec_of(opt),
+                   schedule=ScheduleSpec(n0=n0, clock=clock_params(clk)))
+    return build(spec).run()
 
 
 def time_to_rfvd(trace, f_star: float, tol: float) -> float:

@@ -3,7 +3,8 @@ by the time BET reaches the full dataset it is already near its final test
 accuracy (the practical stopping criterion)."""
 from __future__ import annotations
 
-from repro.core import run_two_track, BETSchedule
+from repro.api import (DataSpec, PolicySpec, RunSpec, ScheduleSpec, build,
+                       optimizer_spec_of)
 from repro.models.linear import accuracy
 
 from . import common
@@ -14,10 +15,13 @@ def main() -> None:
     for name, scale in (("w8a_like", 1.0), ("realsim_like", 1.0)):
         ds, obj, w0, f_star = common.setup(name, scale=scale)
         probe = lambda w: accuracy(w, ds.X_test, ds.y_test)
-        tr = run_two_track(ds, common.default_newton(ds), obj,
-                           schedule=BETSchedule(n0=max(128, ds.d)),
-                           final_steps=25, clock=common.clock(), w0=w0,
-                           probe=probe)
+        session = build(RunSpec(
+            data=DataSpec.from_dict(ds.spec),
+            policy=PolicySpec("two_track", {"final_steps": 25}),
+            optimizer=optimizer_spec_of(common.default_newton(ds)),
+            schedule=ScheduleSpec(n0=max(128, ds.d),
+                                  clock=common.clock_params(common.clock()))))
+        tr = session.run(probe=probe)
         accs = [p.extra.get("probe") for p in tr.points]
         final_acc = accs[-1]
         at_full = next((p.extra.get("probe") for p in tr.points

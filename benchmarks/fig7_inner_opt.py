@@ -11,8 +11,6 @@ accesses — that regime is outside the paper's (and BET's) target envelope.
 """
 from __future__ import annotations
 
-from repro.data.synthetic import PAPER_LIKE, make_classification
-from repro.models.linear import init_params, make_objective, solve_reference
 from repro.optim import NewtonCG, NonlinearCG
 
 from . import common
@@ -22,13 +20,11 @@ TOL = 0.005
 
 
 def main() -> None:
-    cfg = dict(PAPER_LIKE["w8a_like"])
-    cfg["condition"] = 3000.0
-    ds = make_classification("w8a_hard", seed=0, **cfg)
-    obj = make_objective("squared_hinge", lam=1e-4)
-    w0 = init_params(ds.d)
-    _, f_star = solve_reference(obj, w0, (ds.X, ds.y), steps=80)
-    f_star = float(f_star)
+    # the hard-conditioned w8a variant, declaratively: the PAPER_LIKE
+    # generator with its eigen-spread overridden through the DataSpec
+    ds, obj, w0, f_star = common.setup(
+        "w8a_like", scale=1.0, lam=1e-4,
+        generator={"condition": 3000.0}, ref_steps=80)
     acc = {}
     plans = {"cg": (NonlinearCG(), 150, 3, 120),
              "sn": (NewtonCG(hessian_fraction=0.3), 60, 2, 45)}

@@ -1,18 +1,18 @@
 """End-to-end driver: BET as a data schedule for LM pre-training.
 
 Trains a reduced assigned architecture for a few hundred steps on CPU with
-the expanding-window pipeline, comparing the three schedules.  On real
-hardware the same driver runs the full config on the production mesh
-(launch/train.py is the entry point; this example is its library form).
+the expanding-window pipeline, comparing the three schedules.  Each run is
+one declarative `RunSpec` — the schedule comparison is literally a
+one-field sweep over `PolicySpec`s; `launch/train.py` is the CLI form of
+the same spec.
 
     PYTHONPATH=src python examples/bet_lm_training.py [--arch qwen3-0.6b]
         [--steps-per-stage 8] [--full-size]  # full-size = ~100M params
 """
 import argparse
 
-from repro import configs
-from repro.core.timemodel import SimulatedClock
-from repro.launch.train import TrainConfig, train_lm
+from repro.api import (DataSpec, ModelSpec, OptimizerSpec, PolicySpec,
+                       RunSpec, ScheduleSpec, build)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen3-0.6b")
@@ -25,27 +25,51 @@ ap.add_argument("--full-size", action="store_true",
                 help="use a ~100M-param variant (slow on CPU)")
 args = ap.parse_args()
 
-cfg = configs.get(args.arch)
-if not args.full_size:
-    cfg = configs.reduced(cfg)
+# ~100M-param member of the same family (for a few hundred steps on a real
+# host; heavy for the CI container) — plain ModelConfig field overrides;
+# the vocabulary is only ever capped, never enlarged
+if args.full_size:
+    from repro import configs
+    vocab = min(configs.get(args.arch).vocab_size, 32768)
+    overrides = dict(num_layers=8, d_model=768, num_heads=12,
+                     num_kv_heads=4, head_dim=64, d_ff=2048,
+                     vocab_size=vocab)
 else:
-    # ~100M-param member of the same family (for a few hundred steps on a
-    # real host; heavy for the CI container)
-    cfg = cfg.with_(num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
-                    head_dim=64, d_ff=2048,
-                    vocab_size=min(cfg.vocab_size, 32768))
+    overrides = {}
+model = ModelSpec(arch=args.arch, reduced=not args.full_size,
+                  overrides=overrides)
 
-print(f"arch={cfg.name} params≈{cfg.total_params()/1e6:.1f}M "
-      f"(active {cfg.active_params()/1e6:.1f}M)")
+POLICIES = {
+    "bet": PolicySpec("fixed_steps", {"inner_steps": args.steps_per_stage,
+                                      "final_steps": args.final_steps}),
+    "two_track": PolicySpec("two_track", {"final_steps": args.final_steps,
+                                          "condition": "eval",
+                                          "final_eval_full": True,
+                                          "max_stage_iters": 200}),
+    "batch": PolicySpec("batch", {"steps": args.final_steps,
+                                  "eval_full": True}),
+}
 
 results = {}
-for schedule in ("bet", "two_track", "batch"):
-    clock = SimulatedClock(p=10.0, a=2.0, s=5.0, preloaded=64)
-    tc = TrainConfig(schedule=schedule, batch_size=args.batch_size,
-                     seq_len=args.seq_len, n0=64, corpus_size=args.corpus,
-                     inner_steps=args.steps_per_stage,
-                     final_steps=args.final_steps)
-    tr = train_lm(cfg, tc, clock=clock)
+for schedule, policy in POLICIES.items():
+    session = build(RunSpec(
+        name=f"lm_{schedule}",
+        data=DataSpec(kind="lm", corpus_size=args.corpus,
+                      seq_len=args.seq_len, plane="plane"),
+        model=model,
+        policy=policy,
+        optimizer=OptimizerSpec("adamw_lm", {"lr": 1e-3,
+                                             "batch_size": args.batch_size}),
+        schedule=ScheduleSpec(n0=64, step_cost="batch", wait_on_expand=True,
+                              carry_state=True,
+                              clock={"p": 10.0, "a": 2.0, "s": 5.0,
+                                     "preloaded": 64}),
+    ))
+    if schedule == "bet":
+        cfg = session.model_config
+        print(f"arch={cfg.name} params≈{cfg.total_params()/1e6:.1f}M "
+              f"(active {cfg.active_params()/1e6:.1f}M)")
+    tr = session.run()
     results[schedule] = tr
     p = tr.final()
     dp = tr.meta.get("data_plane", {})

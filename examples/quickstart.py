@@ -1,50 +1,50 @@
 """Quickstart: Batch-Expansion Training on a convex problem — the paper's
-own setting (squared-hinge SVM, Eq. 1), in ~40 lines of public API.
+own setting (squared-hinge SVM, Eq. 1), through the declarative front door.
 
-The engine API: one driver (`BetEngine.run`), one `ExpansionPolicy` per
-schedule.  `TwoTrack()` is Algorithm 2 (parameter-free); `NeverExpand` is
-the Batch baseline; swap in `FixedSteps` / `GradientVariance` (or your own
-policy) without touching the loop.
+One `RunSpec` describes a whole run (workload, policy, optimizer, schedule
++ §4.2 time model); `build(spec)` composes and validates the stack, and
+`Session.run()` drives it.  Swapping the expansion policy is a one-line
+spec change — `two_track` (Algorithm 2, parameter-free) vs the `batch`
+baseline below; try `fixed_steps` or `gradient_variance`, or compose them
+(`PolicySpec(..., veto=(...,))`) without touching any loop.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (BETSchedule, BetEngine, NeverExpand, SimulatedClock,
-                        TwoTrack)
-from repro.data.synthetic import load
-from repro.models.linear import (accuracy, init_params, make_objective,
-                                 rfvd, solve_reference)
-from repro.optim import NewtonCG
+from repro.api import (DataSpec, OptimizerSpec, PolicySpec, RunSpec,
+                       ScheduleSpec, build, convex_problem)
+from repro.models.linear import accuracy, rfvd, solve_reference
 
-# 1. A dataset (pre-permuted — BET only ever reads prefix windows of it).
-ds = load("w8a_like", scale=0.5)
-objective = make_objective("squared_hinge", lam=1e-3)
-w0 = init_params(ds.d)
+# 1. The workload: a pre-permuted dataset (BET only ever reads prefix
+#    windows of it) + the Eq. 1 objective, and the paper's time model
+#    (compute accel p, load rate a, call overhead s).
+data = DataSpec(dataset="w8a_like", scale=0.5, lam=1e-3)
+base = dict(
+    data=data,
+    # 2. An inner batch optimizer — any registered linearly-convergent
+    #    method works (paper §5 uses Sub-sampled Newton-CG).
+    optimizer=OptimizerSpec("newton_cg", {"hessian_fraction": 0.2}),
+    schedule=ScheduleSpec(n0=128, clock={"p": 10.0, "a": 1.0, "s": 5.0}),
+)
+
+# 3. Two specs, one engine: Two-Track BET (Algorithm 2) vs Batch.
+bet = build(RunSpec(policy=PolicySpec("two_track", {"final_steps": 20}),
+                    **base))
+batch = build(RunSpec(policy=PolicySpec("batch", {"steps": 25}), **base))
+tr_bet, tr_batch = bet.run(), batch.run()
+
+# 4. Report against the high-precision reference minimizer.
+ds, objective, w0 = convex_problem(data)
 _, f_star = solve_reference(objective, w0, (ds.X, ds.y), steps=60)
-
-# 2. An inner batch optimizer — any linearly-convergent method works
-#    (paper §5 uses Sub-sampled Newton-CG).
-opt = NewtonCG(hessian_fraction=0.2)
-
-# 3. The paper's time model: compute accel p, load rate a, call overhead s.
-make_clock = lambda: SimulatedClock(p=10.0, a=1.0, s=5.0)
-
-# 4. One engine, two policies: Two-Track BET (Algorithm 2) vs Batch.
-engine = BetEngine(schedule=BETSchedule(n0=128))
-bet_clock, batch_clock = make_clock(), make_clock()
-tr_bet = engine.run(ds, opt, objective, TwoTrack(final_steps=20),
-                    clock=bet_clock, w0=w0)
-tr_batch = engine.run(ds, opt, objective, NeverExpand(steps=25),
-                      clock=batch_clock, w0=w0)
-
-for name, tr, clk in (("BET (two-track)", tr_bet, bet_clock),
-                      ("Batch", tr_batch, batch_clock)):
+for name, sess, tr in (("BET (two-track)", bet, tr_bet),
+                       ("Batch", batch, tr_batch)):
+    clk = sess.clock
     print(f"{name:16s} sim_time={clk.time:9.0f}  data_accesses={clk.data_accesses:8d}  "
           f"log-RFVD={float(rfvd(objective, tr.params, (ds.X, ds.y), f_star)):6.2f}  "
           f"test_acc={float(accuracy(tr.params, ds.X_test, ds.y_test)):.4f}  "
           f"host_transfers={tr.meta['host_transfers']}")
 
 # 5. The headline: objective value when only 25% of the simulated time has passed.
-budget = 0.25 * batch_clock.time
+budget = 0.25 * batch.clock.time
 for name, tr in (("BET", tr_bet), ("Batch", tr_batch)):
     vals = [p.f_full for p in tr.points if p.time <= budget]
     print(f"at 25% budget: {name:6s} f = {min(vals) if vals else float('inf'):.4f}")

@@ -2,29 +2,30 @@
 per-stage race between the slow (n_t) and fast (n_{t-1}) tracks and the
 trigger points of condition (3).
 
-The race runs device-side (one lax.while_loop per stage inside
-`BetEngine`); the per-step values printed here arrived on the host in a
-single transfer per stage.
+The whole stack is one declarative spec (`repro.api.RunSpec`); the race
+runs device-side (one lax.while_loop per stage inside `BetEngine`), and
+the per-step values printed here arrived on the host in a single transfer
+per stage.
 
     PYTHONPATH=src python examples/two_track_demo.py
 """
-from repro.core import BETSchedule, BetEngine, SimulatedClock, TwoTrack
-from repro.data.synthetic import load
-from repro.models.linear import init_params, make_objective
-from repro.optim import NewtonCG
+from repro.api import (DataSpec, OptimizerSpec, PolicySpec, RunSpec,
+                       ScheduleSpec, build)
 
-ds = load("w8a_like", scale=0.5)
-obj = make_objective("squared_hinge", lam=1e-3)
-engine = BetEngine(schedule=BETSchedule(n0=128))
-tr = engine.run(ds, NewtonCG(hessian_fraction=0.2), obj,
-                TwoTrack(final_steps=10),
-                clock=SimulatedClock(), w0=init_params(ds.d))
+session = build(RunSpec(
+    data=DataSpec(dataset="w8a_like", scale=0.5, lam=1e-3),
+    policy=PolicySpec("two_track", {"final_steps": 10}),
+    optimizer=OptimizerSpec("newton_cg", {"hessian_fraction": 0.2}),
+    schedule=ScheduleSpec(n0=128),
+))
+tr = session.run()
+N = session.dataset.n
 
 last_stage = None
 for p in tr.points:
     if p.stage != last_stage:
         print(f"--- stage {p.stage}: window {p.window} "
-              f"({100.0 * p.window / ds.n:.0f}% of data) ---")
+              f"({100.0 * p.window / N:.0f}% of data) ---")
         last_stage = p.stage
     fast = p.extra.get("f_fast_on_t")
     fast_s = f" fast={fast:.5f}" if fast is not None else " (final phase)"

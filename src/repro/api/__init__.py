@@ -1,0 +1,25 @@
+# The declarative front door (PR 5): RunSpec — small spec dataclasses with
+# name-addressable registries for every policy/optimizer/store/topology —
+# and build(spec) -> Session, the one composition path behind the CLI,
+# the examples, the benchmarks and the tests.  Specs round-trip to/from
+# dicts/JSON, so a run is a reproducible artifact (saved into checkpoints,
+# printed by --dry-run).
+from .specs import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
+                    OptimizerSpec, PolicySpec, RunSpec, ScheduleSpec,
+                    SpecError, TopologySpec)
+from .registry import (OPTIMIZERS, POLICIES, STORES, TOPOLOGIES,
+                       build_optimizer, build_policy, make_store,
+                       optimizer_spec_of, register_optimizer,
+                       register_policy, register_store)
+from .session import Session, build, convex_problem
+from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
+
+__all__ = [
+    "RunSpec", "DataSpec", "PolicySpec", "OptimizerSpec", "ScheduleSpec",
+    "TopologySpec", "ElasticSpec", "CheckpointSpec", "ModelSpec",
+    "SpecError", "Session", "build", "convex_problem",
+    "POLICIES", "OPTIMIZERS", "STORES", "TOPOLOGIES",
+    "build_policy", "build_optimizer", "optimizer_spec_of", "make_store",
+    "register_policy", "register_optimizer", "register_store",
+    "LMStepOptimizer", "TokenWindows", "make_lm_objective",
+]

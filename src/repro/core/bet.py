@@ -11,8 +11,17 @@ class, not another copy of the loop.
 
 The pre-engine host-side loops live on in core/legacy.py for parity tests
 and benchmarks/bench_engine.py.
+
+.. deprecated::
+    These wrappers are superseded by the declarative front door — build a
+    ``repro.api.RunSpec`` (``PolicySpec("two_track")`` etc.) and drive it
+    through ``repro.api.build(spec).run()``.  They stay bit-exact against
+    the spec-built sessions (parity-tested in tests/test_api.py) but each
+    call emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
+
+import warnings
 
 from ..optim.api import BatchOptimizer, Objective
 from .engine import (BETSchedule, BetEngine, FixedSteps, GradientVariance,
@@ -24,10 +33,18 @@ __all__ = ["BETSchedule", "run_batch", "run_bet_fixed", "run_two_track",
            "run_gradient_variance"]
 
 
+def _deprecated(fn: str, policy: str) -> None:
+    warnings.warn(
+        f"repro.core.bet.{fn} is deprecated: build a repro.api.RunSpec "
+        f"with PolicySpec({policy!r}) and run it through "
+        f"repro.api.build(spec).run()", DeprecationWarning, stacklevel=3)
+
+
 def run_batch(dataset, optimizer: BatchOptimizer, objective: Objective, *,
               steps: int, clock: SimulatedClock | None = None,
               w0=None, record_every: int = 1) -> Trace:
     """Fixed Batch baseline: the inner optimizer on the full dataset."""
+    _deprecated("run_batch", "batch")
     policy = NeverExpand(steps=steps, record_every=record_every)
     return BetEngine().run(dataset, optimizer, objective, policy,
                            w0=w0, clock=clock, trace_name="batch")
@@ -44,6 +61,7 @@ def run_bet_fixed(dataset, optimizer: BatchOptimizer, objective: Objective, *,
     ``final_steps`` continues on the full window until the step budget is
     spent (the `while stopping condition not met` tail of Alg. 2/3).
     """
+    _deprecated("run_bet_fixed", "fixed_steps")
     policy = FixedSteps(inner_steps=inner_steps, final_steps=final_steps)
     return BetEngine(schedule=schedule).run(
         dataset, optimizer, objective, policy, w0=w0, clock=clock,
@@ -63,6 +81,7 @@ def run_two_track(dataset, optimizer: BatchOptimizer, objective: Objective, *,
     secondary step is run per primary step (not two), trading a slightly later
     trigger for less overhead.
     """
+    _deprecated("run_two_track", "two_track")
     policy = TwoTrack(final_steps=final_steps,
                       charge_condition_eval=charge_condition_eval)
     return BetEngine(schedule=schedule).run(
@@ -78,6 +97,7 @@ def run_gradient_variance(dataset, optimizer: BatchOptimizer,
                           w0=None, **policy_kw) -> Trace:
     """Beyond-paper: the DSM/AdaDamp gradient-variance trigger on BET's
     resampling-free expanding window (see engine.GradientVariance)."""
+    _deprecated("run_gradient_variance", "gradient_variance")
     policy = GradientVariance(theta=theta, final_steps=final_steps,
                               **policy_kw)
     return BetEngine(schedule=schedule).run(

@@ -289,6 +289,67 @@ class GradientVariance(ExpansionPolicy):
         return records.var > (self.theta ** 2) * max(records.g2, 1e-30)
 
 
+class ComposedPolicy(ExpansionPolicy):
+    """Policy composition (ROADMAP follow-up): one primary policy owns the
+    stage loop shape (scan chunks or the two-track race) and the expansion
+    proposal; ``vetoes`` must all concur before an expansion is allowed
+    (logical AND — e.g. TwoTrack proposing, a GradientVariance veto holding
+    the stage while the window's gradient still has signal); ``any_of`` may
+    force an expansion the primary has not proposed yet (logical OR).
+
+    The combinator only answers scheduling questions — stepping, clock
+    accounting and tracing stay with the engine — so any scan-kind policy
+    composes freely; a two-track policy may only sit in the ``primary``
+    slot (its condition-(3) trigger runs inside the race kernel, and the
+    engine re-races the stage when a veto holds it open).  Unknown
+    attributes delegate to the primary, so engine lookups like
+    ``max_stage_iters`` / ``charge_condition_eval`` see the primary's."""
+
+    def __init__(self, primary: ExpansionPolicy, vetoes=(), any_of=()):
+        self.primary = primary
+        self.vetoes = tuple(vetoes)
+        self.any_of = tuple(any_of)
+        members = (primary,) + self.vetoes + self.any_of
+        for p in self.vetoes + self.any_of:
+            if p.kind != "scan":
+                raise ValueError(
+                    f"policy {p.name!r} is {p.kind!r}-kind: only the "
+                    f"primary slot of a ComposedPolicy may be two_track "
+                    f"(the race kernel cannot run as a veto)")
+        self.name = "composed(" + "+".join(p.name for p in members) + ")"
+        self.kind = primary.kind
+        self.eval_full = primary.eval_full
+        self.record_every = primary.record_every
+        self.wants_variance = any(p.wants_variance for p in members)
+        self.probe = max((int(p.probe) for p in members), default=0)
+
+    def __getattr__(self, item):
+        if item == "primary":           # guard pre-__init__ lookups
+            raise AttributeError(item)
+        return getattr(self.primary, item)
+
+    def windows(self, schedule: BETSchedule, N: int) -> list[int]:
+        return self.primary.windows(schedule, N)
+
+    def stage_begin(self, info: StageInfo) -> None:
+        for p in (self.primary,) + self.vetoes + self.any_of:
+            p.stage_begin(info)
+
+    def plan_steps(self, info: StageInfo, done_steps: int) -> int:
+        return self.primary.plan_steps(info, done_steps)
+
+    def should_expand(self, info: StageInfo, records: StageRecords) -> bool:
+        if any(p.should_expand(info, records) for p in self.any_of):
+            return True
+        if not self.primary.should_expand(info, records):
+            return False
+        return all(p.should_expand(info, records) for p in self.vetoes)
+
+    def stage_end(self, info: StageInfo, records: StageRecords) -> None:
+        for p in (self.primary,) + self.vetoes + self.any_of:
+            p.stage_end(info, records)
+
+
 # ------------------------------------------------------------ stage kernels
 _KERNEL_CACHE: dict[tuple, Callable] = {}
 
@@ -496,20 +557,14 @@ class BetEngine:
             first_stage = resume.next_stage
             trace.meta["resumed_from_stage"] = first_stage - 1
 
-        windows = policy.windows(self.schedule, N)
         if policy.kind == "two_track":
             w, state = self._run_two_track(
-                run_ctx, dataset, optimizer, objective, policy, windows,
+                run_ctx, dataset, optimizer, objective, policy,
                 w, state, full_data, first_stage=first_stage)
         else:
-            for stage, n_t in enumerate(windows):
-                if stage < first_stage:
+            for info in self.stage_infos(policy, N):
+                if info.stage < first_stage:
                     continue            # completed before the checkpoint
-                info = StageInfo(stage=stage, n_t=n_t,
-                                 n_prev=windows[stage - 1] if stage else n_t,
-                                 is_final=n_t >= N, N=N,
-                                 n_next=windows[stage + 1]
-                                 if stage + 1 < len(windows) else None)
                 state = optimizer.reset_memory(state)  # f̂_t changed
                 w, state = self._run_scan_stage(
                     run_ctx, dataset, optimizer, objective, policy, info,
@@ -520,6 +575,30 @@ class BetEngine:
         return trace
 
     # ---------------------------------------------------------- stage windows
+    def stage_infos(self, policy: ExpansionPolicy, N: int) -> list[StageInfo]:
+        """The stages a run of ``policy`` over ``N`` examples executes, in
+        order — the single definition behind the run loops and the
+        session's ``stage_plan()`` (dry-run printing).  Two-track runs race
+        stages 1..T over consecutive window pairs, then a final full-window
+        phase; scan policies run one stage per window."""
+        windows = policy.windows(self.schedule, N)
+        if policy.kind == "two_track":
+            infos = [StageInfo(stage=stage, n_t=windows[stage],
+                               n_prev=windows[stage - 1],
+                               is_final=windows[stage] >= N, N=N,
+                               n_next=windows[stage + 1]
+                               if stage + 1 < len(windows) else None)
+                     for stage in range(1, len(windows))]
+            infos.append(StageInfo(stage=len(windows), n_t=N, n_prev=N,
+                                   is_final=True, N=N))
+            return infos
+        return [StageInfo(stage=stage, n_t=n_t,
+                          n_prev=windows[stage - 1] if stage else n_t,
+                          is_final=n_t >= N, N=N,
+                          n_next=windows[stage + 1]
+                          if stage + 1 < len(windows) else None)
+                for stage, n_t in enumerate(windows)]
+
     @staticmethod
     def _acquire_window(dataset, n_t: int, n_next: int | None):
         """Stage setup against the data plane: a ``StreamingDataset`` makes
@@ -642,7 +721,7 @@ class BetEngine:
 
     # ------------------------------------------------------- two-track stages
     def _run_two_track(self, ctx, dataset, optimizer, objective,
-                       policy: TwoTrack, windows, w, state, full_data, *,
+                       policy: TwoTrack, w, state, full_data, *,
                        first_stage: int = 0):
         clock, cost, trace = ctx["clock"], ctx["cost"], ctx["trace"]
         collect_params = ctx["probe"] is not None
@@ -650,13 +729,12 @@ class BetEngine:
                                    condition_eval=policy.condition == "eval",
                                    collect_params=collect_params)
         N = dataset.n
-        for stage in range(1, len(windows)):
+        *racing, final_info = self.stage_infos(policy, N)
+        for info in racing:
+            stage = info.stage
             if stage < first_stage:
                 continue                # completed before the checkpoint
-            n_prev, n_t = windows[stage - 1], windows[stage]
-            n_next = windows[stage + 1] if stage + 1 < len(windows) else None
-            info = StageInfo(stage=stage, n_t=n_t, n_prev=n_prev,
-                             is_final=n_t >= N, N=N, n_next=n_next)
+            n_prev, n_t, n_next = info.n_prev, info.n_t, info.n_next
             win_t = self._acquire_window(dataset, n_t, n_next)
             win_prev = dataset.window(n_prev)   # resident prefix: no loads
             if self.wait_on_expand:
@@ -665,34 +743,65 @@ class BetEngine:
                 state if self.carry_state else optimizer.init(w))
             st_fast = optimizer.init(w)
             policy.stage_begin(info)
-            out = kernel(w, st_slow, st_fast, win_t, win_prev, full_data,
-                         max_iters=int(policy.max_stage_iters))
-            w, state = out["params"], out["state"]
-            pulled = jax.device_get(
-                {n: v for n, v in out.items() if n not in ("params", "state")})
-            ctx["transfers"] += 1
-            s = int(pulled["s"])
+            probe_k = min(int(policy.probe), n_t) \
+                if policy.wants_variance else 0
             rec = StageRecords()
-            rec.add_chunk(pulled["f_slow"][:s], pulled["f_full"][:s],
-                          jax.tree_util.tree_map(lambda b: b[:s], pulled["W"])
-                          if collect_params else None)
-            rec.f_fast_on_t = pulled["f_fast"][:s]
-            rec.triggered = bool(pulled["triggered"])
-            assert policy.should_expand(info, rec)
+            fast_hist: list[np.ndarray] = []
+            # race rounds: plain TwoTrack always confirms after one round
+            # (its trigger fired on device, or max_stage_iters elapsed); a
+            # ComposedPolicy veto can hold the stage open, re-racing from
+            # the current point with a fresh fast track
+            while True:
+                out = kernel(w, st_slow, st_fast, win_t, win_prev, full_data,
+                             max_iters=int(policy.max_stage_iters))
+                w, state = out["params"], out["state"]
+                pulled = jax.device_get(
+                    {n: v for n, v in out.items()
+                     if n not in ("params", "state")})
+                ctx["transfers"] += 1
+                s = int(pulled["s"])
+                rec.add_chunk(pulled["f_slow"][:s], pulled["f_full"][:s],
+                              jax.tree_util.tree_map(lambda b: b[:s],
+                                                     pulled["W"])
+                              if collect_params else None)
+                fast_hist.append(pulled["f_fast"][:s])
+                rec.f_fast_on_t = np.concatenate(fast_hist)
+                rec.triggered = bool(pulled["triggered"])
+                if policy.wants_variance:
+                    v, g2 = jax.device_get(cached_variance(objective)(
+                        w, win_t, probe_k))
+                    ctx["transfers"] += 1
+                    rec.var, rec.g2 = float(v), float(g2)
+                if policy.should_expand(info, rec):
+                    break
+                if rec.steps > self.max_engine_steps:
+                    raise RuntimeError(
+                        f"policy {policy.name} never expanded after "
+                        f"{rec.steps} racing steps")
+                st_slow = state
+                st_fast = optimizer.init(w)
+            s = rec.steps
             self._collect_host_records(ctx, info)
             # replay the per-step clock charges: slow update, fast update,
-            # condition evaluation (charged per the paper unless disabled)
+            # condition evaluation (charged per the paper unless disabled),
+            # plus one variance-probe eval at each race-round boundary
             times = np.empty(s)
             accs = np.empty(s, dtype=np.int64)
             touched = 0
-            for i in range(s):
-                clock.batch_update(cost(n_t))
-                clock.batch_update(cost(n_prev))
-                touched += cost(n_t) + cost(n_prev)
-                if policy.charge_condition_eval:
-                    clock.eval_pass(cost(n_t))
-                    touched += cost(n_t)
-                times[i], accs[i] = clock.time, clock.data_accesses
+            i = 0
+            for clen in rec.chunk_lengths():
+                for j in range(clen):
+                    clock.batch_update(cost(n_t))
+                    clock.batch_update(cost(n_prev))
+                    touched += cost(n_t) + cost(n_prev)
+                    if policy.charge_condition_eval:
+                        clock.eval_pass(cost(n_t))
+                        touched += cost(n_t)
+                    if probe_k and j == clen - 1:
+                        clock.eval_pass(probe_k)
+                        touched += probe_k
+                    times[i], accs[i] = clock.time, clock.data_accesses
+                    i += 1
             self._note_access(ctx, touched)
             extras = [{"f_fast_on_t": float(rec.f_fast_on_t[i])}
                       for i in range(s)]
@@ -712,10 +821,9 @@ class BetEngine:
             self._stage_boundary(ctx, info, w, state)
 
         # final phase: full window until the step budget is spent
-        if first_stage > len(windows):
+        if first_stage > final_info.stage:
             return w, state             # checkpoint already past the final phase
-        info = StageInfo(stage=len(windows), n_t=N, n_prev=N,
-                         is_final=True, N=N)
+        info = final_info
         state = optimizer.reset_memory(
             state if self.carry_state else optimizer.init(w))
         w, state = self._run_scan_stage(

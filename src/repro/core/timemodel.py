@@ -60,6 +60,20 @@ class SimulatedClock:
         self.data_accesses += b
         self.points_loaded += b  # resampled loads (may recount points)
 
+    def spec_params(self) -> dict:
+        """This clock's architecture parameters in ``ScheduleSpec.clock``
+        form.  Only a *fresh* clock is expressible as spec parameters —
+        elapsed time/accesses would be silently dropped, so a used clock
+        is rejected instead."""
+        if self.time or self.data_accesses or \
+                self.points_loaded > self.preloaded:
+            raise ValueError(
+                "a used SimulatedClock cannot be expressed as spec "
+                "parameters (its elapsed time/accesses would be dropped); "
+                "pass a fresh clock")
+        return {"p": self.p, "a": self.a, "s": self.s,
+                "preloaded": self.preloaded}
+
     def snapshot(self) -> dict:
         return {"time": self.time, "accesses": self.data_accesses,
                 "loaded": self.points_loaded}

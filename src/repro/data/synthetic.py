@@ -23,6 +23,10 @@ class Dataset:
     y: jnp.ndarray       # (n,) float32 in {-1, +1}
     X_test: jnp.ndarray
     y_test: jnp.ndarray
+    # the DataSpec dict this dataset was built from (repro.api attaches it
+    # so drivers can rebuild the exact workload declaratively)
+    spec: dict | None = dataclasses.field(default=None, compare=False,
+                                          repr=False)
 
     @property
     def n(self) -> int:

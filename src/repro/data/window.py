@@ -12,6 +12,7 @@ the legacy path reports the same Thm 4.1 counters as the plane.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -24,6 +25,12 @@ class ExpandingWindow:
     """A windowed view over a pre-permuted token corpus.
 
     tokens: (N, seq_len) int32 — sequence-packed examples, pre-permuted.
+
+    .. deprecated::
+        The host shim survives for §3.3-semantics-without-a-device tests;
+        real runs compose the streaming plane declaratively through
+        ``repro.api.build(RunSpec)`` (``DataSpec(plane="plane")``).
+        Construction emits a ``DeprecationWarning``.
     """
     tokens: np.ndarray
     n0: int
@@ -32,6 +39,11 @@ class ExpandingWindow:
     meter: DataAccessMeter | None = None
 
     def __post_init__(self):
+        warnings.warn(
+            "ExpandingWindow is a host-side compatibility shim: compose "
+            "the streaming data plane through repro.api.build(RunSpec) "
+            "(DataSpec(plane='plane')) instead", DeprecationWarning,
+            stacklevel=3)
         if not self.growth > 1.0:
             raise ValueError(
                 f"ExpandingWindow.growth must be > 1, got {self.growth}: "

@@ -136,10 +136,13 @@ def _point_dicts(trace) -> list[dict]:
 class StageCheckpointer:
     """Rolling stage-boundary checkpoints; plugs into
     ``BetEngine.stage_callback``.  ``every`` thins the cadence (checkpoint
-    after stages 0, every, 2*every, ...); the final stage always saves."""
+    after stages 0, every, 2*every, ...); the final stage always saves.
+    ``spec`` (a ``RunSpec.to_dict()``) is saved into every checkpoint's
+    meta, making the checkpoint a self-describing, re-buildable artifact."""
     directory: str
     keep: int = 3
     every: int = 1
+    spec: dict | None = None
 
     def __post_init__(self):
         if self.keep < 1:
@@ -165,6 +168,8 @@ class StageCheckpointer:
             "trace": {"method": end.trace.method,
                       "points": _point_dicts(end.trace)},
         }
+        if self.spec is not None:
+            meta["spec"] = self.spec
         save_state(path, {"params": end.params, "opt": end.opt_state},
                    meta=meta)
         self.saved.append(end.info.stage)

@@ -1,18 +1,11 @@
-"""Distributed LM training driver with Batch-Expansion Training as a
-first-class schedule.
+"""Distributed LM training driver — a thin argparse -> RunSpec client.
 
-This is the beyond-paper integration (DESIGN.md §2): BET's expanding window
-drives the data pipeline of a standard pjit LM training loop.  The window
-scheduling itself is the unified policy engine (core/engine.py) — the same
-``BetEngine`` that runs the paper's convex experiments drives the LM path
-through two adapters:
-
-  * ``LMStepOptimizer`` wraps the pjit train step as a ``BatchOptimizer``
-    whose ``data`` is the resident token window; each inner step rotates a
-    mini-batch through the window *on device* (sequential epochs over
-    loaded data — no random disk access, the BET property),
-  * the objective evaluates the loss on a probe prefix of whatever token
-    block it is handed (the two-track condition (3) and eval measurements).
+All composition lives behind the declarative front door
+(``repro.api.build(RunSpec) -> Session``): this module only translates
+CLI flags (or the library-facing :class:`TrainConfig`) into a
+:class:`~repro.api.RunSpec` and drives the session.  The LM adapters
+themselves (``LMStepOptimizer``, ``make_lm_objective``, ``TokenWindows``)
+live in ``repro.api.lm``.
 
 Schedules map to policies: ``batch`` → NeverExpand, ``bet`` → FixedSteps
 (Alg. 1/3), ``two_track`` → TwoTrack (Alg. 2).  Stages run device-side in
@@ -25,39 +18,27 @@ hardware the identical code paths run on the production mesh with the
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
         --schedule two_track --stages 4 --inner-steps 8
+    PYTHONPATH=src python -m repro.launch.train --dry-run   # print the spec
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
-
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import configs
-from ..core.engine import (BETSchedule, BetEngine, FixedSteps, NeverExpand,
-                           TwoTrack)
-from ..core.timemodel import SimulatedClock
+from ..api import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
+                   OptimizerSpec, PolicySpec, RunSpec, ScheduleSpec,
+                   TopologySpec, build)
+from ..api.lm import LMStepOptimizer, TokenWindows, make_lm_objective  # noqa: F401 (compat re-export)
 from ..core.trace import Trace
-from ..data.device_window import probe_rows, rotation_rows
-from ..data.plane import StreamingDataset
-from ..data.shards import InMemoryShardStore
-from ..data.window import synth_corpus
-from ..dist.topology import SimulatedTopology
-from ..elastic import (ElasticBetEngine, ElasticDataset, FaultPlan,
-                       StageCheckpointer)
-from ..models import transformer as T
-from ..optim.api import BatchOptimizer
-from . import steps
-from .mesh import axis_size, dp_axes, make_host_mesh
 
 
 @dataclasses.dataclass
 class TrainConfig:
+    """Library-facing knobs for the LM path — a flat, keyword-friendly
+    mirror of the RunSpec fields the CLI exposes (``to_run_spec`` is the
+    one translation)."""
     schedule: str = "bet"           # batch | bet | two_track
     batch_size: int = 8
     seq_len: int = 128
@@ -74,213 +55,95 @@ class TrainConfig:
     # clamped to n0 // num_hosts so every host owns a shard from stage 0
     shard_size: int = 64
     prefetch_workers: int = 1   # one sequential load channel (§4.2's ``a``)
-    # > 1: simulated multi-host data parallelism (dist/) — each logical host
-    # streams only its owned shards and contributes batch_size/num_hosts rows
-    # per inner step from its own resident lane.  Batches are then composed
-    # per host rather than from the global permutation (the paper's
-    # distributed setting), so the trajectory intentionally differs from the
-    # single-host runs; resource accounting is per host + global.
+    # > 1: simulated multi-host data parallelism (dist/) — per-host batch
+    # composition, so the trajectory intentionally differs from single host
     num_hosts: int = 1
     # fault tolerance (elastic/): stage checkpoints land in ckpt_dir; resume
-    # restarts from the latest one (bit-compatible cursor/clock/meter state);
-    # kill_host_at="STAGE:HOST" injects a host loss at that stage boundary
-    # (hosts > 1 — the lane is handed over and rebuilt from storage)
+    # restarts from the latest one; kill_host_at="STAGE:HOST" injects a host
+    # loss at that stage boundary (hosts > 1)
     ckpt_dir: str | None = None
     resume: bool = False
     kill_host_at: str | None = None
     straggler_deadline_s: float | None = None
 
 
-@dataclasses.dataclass(frozen=True)
-class LMStepOptimizer(BatchOptimizer):
-    """The pjit LM train step as a BatchOptimizer over token windows.
-
-    ``data`` is the resident (n_t, seq_len+1) token window; the step gathers
-    a rotating mini-batch from it on device, so whole stages scan without
-    host round-trips.  ``reset_memory`` is inherited as the identity: Adam
-    moments survive batch expansions (the LM objective is stochastic per
-    batch anyway, so stage boundaries do not invalidate them)."""
-    train_step: Callable = None
-    init_opt: Callable = None
-    batch_size: int = 8
-    name: str = "adamw_lm"
-
-    def init(self, params):
-        return {"opt": self.init_opt(params), "t": jnp.int32(0)}
-
-    def step(self, params, state, objective, data):
-        # ``data`` is a host-path (n_t, L) slice, the plane's fixed-capacity
-        # MaskedWindow (both: rotation through the valid prefix gathers
-        # identical rows), or the multi-host stacked HostWindows — there each
-        # host rotates through its *own* lane and the global batch is the
-        # concatenation of the per-host sub-batches (dist data parallelism).
-        # One lane-aware gather serves all three (data/device_window.py).
-        rows = rotation_rows(data, self.batch_size, state["t"])
-        batch = {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
-        params, opt, metrics = self.train_step(params, state["opt"], batch)
-        return params, {"opt": opt, "t": state["t"] + 1}, {"f": metrics["loss"]}
+_POLICIES = {
+    "batch": lambda tc: PolicySpec("batch", {"steps": tc.final_steps,
+                                             "eval_full": True}),
+    "bet": lambda tc: PolicySpec("fixed_steps",
+                                 {"inner_steps": tc.inner_steps,
+                                  "final_steps": tc.final_steps}),
+    "two_track": lambda tc: PolicySpec(
+        "two_track", {"final_steps": tc.final_steps,
+                      "max_stage_iters": tc.max_stage_steps,
+                      "condition": "eval", "final_eval_full": True}),
+}
 
 
-@dataclasses.dataclass
-class TokenWindows:
-    """Host-slice view of a pre-permuted token corpus: nested prefix windows
-    of one permutation (§3.3's data-access contract).  The reference path
-    the streaming plane is held bit-exact against (``use_plane=False``)."""
-    tokens: Any                    # (N, seq_len+1) int32, device
+def to_run_spec(cfg, tc: TrainConfig, *,
+                clock: dict | None = None) -> RunSpec:
+    """TrainConfig -> the declarative RunSpec the session is built from.
 
-    @property
-    def n(self) -> int:
-        return int(self.tokens.shape[0])
-
-    def window(self, n_t: int):
-        return self.tokens[:n_t]
-
-
-def make_lm_objective(cfg, eval_rows: int = 64):
-    """loss(params, token block) on a fixed-size probe of the block.
-
-    The probe is always ``eval_rows`` rows rotating through the block's
-    valid prefix (``% n_valid``), so host-path slices and the plane's
-    fixed-capacity MaskedWindow compute the identical batch — windows
-    smaller than the probe wrap instead of shrinking it, keeping the
-    two-track condition (3) comparison at a constant sample size and the
-    two data paths bit-exact against each other."""
-    def objective(params, toks):
-        # host-path slices, MaskedWindows, and multi-host stage windows all
-        # probe through the one lane-aware gather (an equal per-lane share)
-        probe = probe_rows(toks, eval_rows)
-        batch = {"tokens": probe[:, :-1], "labels": probe[:, 1:]}
-        return T.loss_fn(cfg, params, batch)[0]
-    return objective
-
-
-def train_lm(cfg, tc: TrainConfig, *, mesh=None, clock=None,
-             progress=None) -> Trace:
-    mesh = mesh or make_host_mesh()
-    clock = clock or SimulatedClock(preloaded=tc.n0)
-    corpus = synth_corpus(tc.corpus_size, tc.seq_len + 1,
-                          max(2, cfg.vocab_size), seed=tc.seed)
-    # eval probe sliced on the host: the plane path must not ship the whole
-    # corpus to device just to build it — the DeviceWindow streams that
-    eval_np = corpus[:: max(1, len(corpus) // tc.eval_rows)][: tc.eval_rows]
-    eval_tokens = jnp.asarray(eval_np)
-    if tc.num_hosts > 1:
-        # simulated multi-host: one streaming plane per logical host over
-        # only its owned shards, lanes of one stacked SPMD window
-        if not tc.use_plane:
-            raise ValueError("num_hosts > 1 requires the streaming plane "
-                             "(use_plane=True)")
-        if tc.batch_size % tc.num_hosts:
+    ``cfg`` may be a ModelConfig (its name resolves through the configs
+    registry; the full vs ``configs.reduced`` variant is detected) or a
+    bare arch name, which builds the **reduced** smoke variant — pass a
+    full ModelConfig (or ``ModelSpec`` via ``repro.api`` directly) to
+    train the registered architecture at size.  ``clock`` overrides the
+    §4.2 time-model parameters (default: data preloaded up to n0, the
+    historical driver behavior)."""
+    if isinstance(cfg, str):
+        arch, reduced = cfg, True
+    else:
+        # a reduced() config keeps its registry name; rebuild the same way
+        arch = cfg.name
+        full = configs.get(arch)
+        if cfg == full:
+            reduced = False
+        elif cfg == configs.reduced(full):
+            reduced = True
+        else:
             raise ValueError(
-                f"batch_size={tc.batch_size} must split evenly over "
-                f"{tc.num_hosts} hosts")
-        if tc.n0 < tc.num_hosts:
-            raise ValueError(
-                f"n0={tc.n0} cannot give each of {tc.num_hosts} hosts an "
-                f"example — per-host batch composition needs every lane "
-                f"non-empty from the first stage")
-        # clamp shard granularity so every host owns a shard inside n0:
-        # empty lanes would otherwise silently serve their zero padding
-        # through rotation_batch/probe_rows for the early stages
-        shard = min(tc.shard_size, max(1, tc.n0 // tc.num_hosts))
-        # the elastic dataset behaves identically to DistributedDataset
-        # until a fault/deadline event fires; slack leaves lane headroom
-        # for straggler tail reassignment
-        data = ElasticDataset(
-            [InMemoryShardStore(corpus, shard)],
-            topology=SimulatedTopology(tc.num_hosts),
-            prefetch_workers=tc.prefetch_workers,
-            capacity_slack=2.0 if tc.straggler_deadline_s else 1.0)
-        assert data.ownership.min_full_participation_window() <= tc.n0
-    elif tc.use_plane:
-        # the streaming plane: sharded corpus -> async prefetch -> a device
-        # window preallocated at corpus capacity, sharded over the mesh's
-        # data axes, grown in place at each expansion
-        dp = dp_axes(mesh)
-        batch_axes = dp if tc.corpus_size % axis_size(mesh, dp) == 0 else None
-        data = StreamingDataset(
-            [InMemoryShardStore(corpus, tc.shard_size)], masked=True,
-            shardings=NamedSharding(mesh, P(batch_axes, None)),
-            prefetch_workers=tc.prefetch_workers)
-    else:
-        data = TokenWindows(jnp.asarray(corpus))
+                f"train.py rebuilds {arch!r} from the configs registry; "
+                f"express custom configs as ModelSpec.overrides through "
+                f"repro.api.build directly")
+    if tc.schedule not in _POLICIES:
+        raise ValueError(f"unknown schedule {tc.schedule!r}; "
+                         f"pick from {sorted(_POLICIES)}")
+    faults = (f"kill@{tc.kill_host_at}",) if tc.kill_host_at else ()
+    return RunSpec(
+        name=f"lm_{tc.schedule}",
+        data=DataSpec(kind="lm", corpus_size=tc.corpus_size,
+                      seq_len=tc.seq_len, eval_rows=tc.eval_rows,
+                      plane="plane" if tc.use_plane else "host",
+                      shard_size=tc.shard_size,
+                      prefetch_workers=tc.prefetch_workers, seed=tc.seed),
+        model=ModelSpec(arch=arch, reduced=reduced),
+        policy=_POLICIES[tc.schedule](tc),
+        optimizer=OptimizerSpec("adamw_lm", {"lr": tc.lr,
+                                             "batch_size": tc.batch_size}),
+        schedule=ScheduleSpec(n0=tc.n0,
+                              clock=clock if clock is not None
+                              else {"preloaded": tc.n0},
+                              step_cost="batch", wait_on_expand=True,
+                              carry_state=True),
+        topology=TopologySpec(hosts=tc.num_hosts),
+        elastic=ElasticSpec(
+            faults=faults,
+            straggler_deadline_s=tc.straggler_deadline_s,
+            capacity_slack=2.0 if tc.straggler_deadline_s else 1.0),
+        checkpoint=CheckpointSpec(directory=tc.ckpt_dir, resume=tc.resume),
+    )
 
-    params = T.init_params(cfg, jax.random.key(tc.seed))
-    optimizer = LMStepOptimizer(train_step=steps.make_train_step(cfg, lr=tc.lr),
-                                init_opt=steps.init_opt_state,
-                                batch_size=tc.batch_size)
-    # clamp the probe to the eval set so a small eval block is an unweighted
-    # mean over distinct rows; stage windows below that size wrap instead,
-    # identically on both data paths
-    objective = make_lm_objective(cfg, min(tc.eval_rows, len(eval_np)))
 
-    if tc.schedule == "batch":
-        policy = NeverExpand(steps=tc.final_steps, eval_full=True)
-    elif tc.schedule == "bet":
-        policy = FixedSteps(inner_steps=tc.inner_steps,
-                            final_steps=tc.final_steps)
-    elif tc.schedule == "two_track":
-        policy = TwoTrack(final_steps=tc.final_steps,
-                          max_stage_iters=tc.max_stage_steps,
-                          condition="eval", final_eval_full=True)
-    else:
-        raise ValueError(tc.schedule)
-
-    # the distributed engine adds the once-per-stage collective flush of
-    # per-host records (trace.meta["host_stage_records"]) on top of the
-    # identical device-side stage execution; the elastic engine additionally
-    # applies fault events and the straggler deadline at stage boundaries
-    if tc.num_hosts > 1:
-        engine = ElasticBetEngine(schedule=BETSchedule(n0=tc.n0),
-                                  step_cost=lambda n_t: tc.batch_size,
-                                  wait_on_expand=True, carry_state=True,
-                                  deadline_s=tc.straggler_deadline_s)
-        if tc.kill_host_at:
-            engine.faults = FaultPlan.parse([f"kill@{tc.kill_host_at}"])
-    else:
-        if tc.kill_host_at:
-            raise ValueError("--kill-host-at injects a *host* loss and "
-                             "needs --hosts > 1; single-host restarts are "
-                             "the --resume path")
-        if tc.straggler_deadline_s is not None:
-            raise ValueError("--straggler-deadline rebalances shards "
-                             "*between* hosts and needs --hosts > 1")
-        engine = BetEngine(schedule=BETSchedule(n0=tc.n0),
-                           step_cost=lambda n_t: tc.batch_size,
-                           wait_on_expand=True, carry_state=True)
-    run_kw: dict = {"w0": params}
-    if tc.ckpt_dir:
-        engine.stage_callback = StageCheckpointer(tc.ckpt_dir)
-    rewarm = None
-    if tc.resume:
-        if not tc.ckpt_dir:
-            raise ValueError("--resume needs --ckpt-dir to restore from")
-        restored = StageCheckpointer(tc.ckpt_dir).restore(
-            params, optimizer.init(params))
-        if restored is None:
-            raise FileNotFoundError(
-                f"--resume: no stage checkpoint under {tc.ckpt_dir}")
-        restored.restore_clock(clock)
-        rewarm = restored.restore_dataset(data)
-        run_kw = {"w0": restored.params, "opt_state0": restored.opt_state,
-                  "resume": restored.resume}
-    try:
-        trace = engine.run(data, optimizer, objective, policy,
-                           clock=clock, eval_data=eval_tokens,
-                           trace_name=f"lm_{tc.schedule}",
-                           meta={"arch": cfg.name}, progress=progress,
-                           **run_kw)
-    finally:
-        if tc.use_plane:
-            data.close()
-    if rewarm is not None:
-        trace.meta["resume_rewarm"] = rewarm
-    if tc.use_plane:
-        trace.meta["data_plane"] = data.meter.snapshot()
-    if tc.num_hosts > 1:
-        trace.meta["data_plane_hosts"] = {
-            h: data.host_meters[h].snapshot() for h in data.planes}
-    return trace
+def train_lm(cfg, tc: TrainConfig, *, clock=None, progress=None) -> Trace:
+    """Run the LM path the TrainConfig describes through the one
+    composition path (``repro.api.build``).  ``cfg`` must be a registered
+    architecture's ModelConfig (possibly ``configs.reduced``); ``clock``
+    accepts a fresh SimulatedClock whose parameters are folded into the
+    spec (kept for the historical call signature)."""
+    clock_dict = clock.spec_params() if clock is not None else None
+    return build(to_run_spec(cfg, tc, clock=clock_dict)).run(
+        progress=progress)
 
 
 def main() -> None:
@@ -314,6 +177,9 @@ def main() -> None:
                     help="deadline-based stage flush: migrate a straggler "
                          "host's next-expansion shards when its backlog "
                          "will not drain in time")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the composed RunSpec (JSON) and the stage "
+                         "plan, then exit without running")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -325,8 +191,16 @@ def main() -> None:
                      num_hosts=args.hosts, ckpt_dir=args.ckpt_dir,
                      resume=args.resume, kill_host_at=args.kill_host_at,
                      straggler_deadline_s=args.straggler_deadline)
+    session = build(to_run_spec(cfg, tc))
+    if args.dry_run:
+        print(session.spec.to_json())
+        for info in session.stage_plan():
+            print(f"stage {info.stage}: window {info.n_t}"
+                  f"{' (final)' if info.is_final else ''}")
+        session.close()
+        return
     t0 = time.time()
-    trace = train_lm(cfg, tc, progress=lambda p: print(
+    trace = session.run(progress=lambda p: print(
         f"step {p.step:4d} stage {p.stage} window {p.window:5d} "
         f"t={p.time:9.0f} loss={p.f_window:.4f} eval={p.f_full:.4f}",
         flush=True))

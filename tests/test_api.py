@@ -1,0 +1,309 @@
+"""The declarative front door (tier1): spec round-trips for every
+registered component, eager cross-component validation at build() (bad
+combos fail with SpecError, never mid-run), ComposedPolicy combinator
+semantics, and bit-exact parity of the deprecated wrappers against
+spec-built sessions."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
+                       OPTIMIZERS, OptimizerSpec, POLICIES, PolicySpec,
+                       RunSpec, STORES, ScheduleSpec, SpecError,
+                       TOPOLOGIES, TopologySpec, build, build_optimizer,
+                       build_policy, convex_problem, optimizer_spec_of)
+from repro.core import ComposedPolicy, FixedSteps, GradientVariance, TwoTrack
+from repro.core.engine import StageInfo, StageRecords
+
+pytestmark = pytest.mark.tier1
+
+DATA = DataSpec(dataset="w8a_like", scale=0.02)
+SCHED = ScheduleSpec(n0=32)
+OPT = OptimizerSpec("newton_cg", {"hessian_fraction": 1.0})
+FIXED = PolicySpec("fixed_steps", {"inner_steps": 2, "final_steps": 3})
+
+
+def _spec(**kw):
+    base = dict(data=DATA, policy=FIXED, optimizer=OPT, schedule=SCHED)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# ------------------------------------------------------------- round trips
+def test_roundtrip_every_registered_policy():
+    for name in POLICIES.names():
+        spec = _spec(policy=PolicySpec(name))
+        again = RunSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.policy.name == name
+
+
+def test_roundtrip_every_registered_optimizer():
+    for name in OPTIMIZERS.names():
+        spec = _spec(optimizer=OptimizerSpec(name))
+        assert RunSpec.from_json(spec.to_json()) == spec
+
+
+def test_roundtrip_every_registered_store_and_topology():
+    for name in STORES.names():
+        spec = _spec(data=DATA.replace(store=name))
+        assert RunSpec.from_json(spec.to_json()) == spec
+    for name in TOPOLOGIES.names():
+        spec = _spec(topology=TopologySpec(kind=name, hosts=2))
+        assert RunSpec.from_json(spec.to_json()) == spec
+
+
+def test_roundtrip_kitchen_sink():
+    spec = RunSpec(
+        name="everything",
+        data=DataSpec(kind="lm", corpus_size=128, seq_len=16,
+                      plane="plane", shard_size=8,
+                      generator={"condition": 3000.0, "n": 256}),
+        model=ModelSpec(arch="qwen3-0.6b", overrides={"num_layers": 1}),
+        policy=PolicySpec("two_track", {"final_steps": 4},
+                          veto=(PolicySpec("gradient_variance",
+                                           {"theta": 0.4}),),
+                          any_of=(PolicySpec("fixed_steps"),)),
+        optimizer=OptimizerSpec("adamw_lm", {"lr": 1e-3, "batch_size": 4}),
+        schedule=ScheduleSpec(n0=16, growth=1.5,
+                              clock={"p": 20.0, "a": 2.0, "s": 1.0,
+                                     "preloaded": 16},
+                              step_cost="batch", wait_on_expand=True,
+                              carry_state=True),
+        topology=TopologySpec(hosts=4),
+        elastic=ElasticSpec(faults=("kill@2:1", "slow@1:3=0.02"),
+                            straggler_deadline_s=0.1, capacity_slack=2.0,
+                            worker_delays={1: 0.5}),
+        checkpoint=CheckpointSpec(directory="/tmp/ck", keep=2, every=2),
+        meta={"note": "round trip"},
+    )
+    again = RunSpec.from_json(spec.to_json())
+    assert again == spec
+    # nested specs land as spec objects, not dicts
+    assert isinstance(again.policy.veto[0], PolicySpec)
+    assert again.elastic.worker_delays == {1: 0.5}
+
+
+def test_from_dict_rejects_unknown_fields():
+    with pytest.raises(SpecError, match="no field"):
+        RunSpec.from_dict({"polcy": {}})
+    with pytest.raises(SpecError, match="no field"):
+        DataSpec.from_dict({"dataset": "w8a_like", "sclae": 1.0})
+
+
+def test_optimizer_spec_of_roundtrips_instances():
+    from repro.optim import LBFGS, NewtonCG
+    for opt in (NewtonCG(hessian_fraction=0.3, cg_steps=5), LBFGS()):
+        spec = optimizer_spec_of(opt)
+        assert build_optimizer(spec) == opt
+
+
+# -------------------------------------------------------- eager validation
+@pytest.mark.parametrize("mutate, match", [
+    (dict(policy=PolicySpec("nope")), "unknown policy"),
+    (dict(optimizer=OptimizerSpec("nope")), "unknown optimizer"),
+    (dict(data=DATA.replace(store="nope")), "unknown store"),
+    (dict(data=DATA.replace(dataset="nope")), "unknown convex dataset"),
+    (dict(data=DATA.replace(loss="nope")), "unknown loss"),
+    (dict(topology=TopologySpec(kind="nope")), "unknown topology"),
+    (dict(topology=TopologySpec(hosts=2)), "streaming plane"),
+    (dict(policy=PolicySpec("gradient_variance"),
+          data=DATA.replace(plane="plane"),
+          topology=TopologySpec(hosts=2)), "SPMD"),
+    (dict(elastic=ElasticSpec(faults=("kill@1:0",))), "hosts > 1"),
+    (dict(elastic=ElasticSpec(straggler_deadline_s=0.1)), "hosts > 1"),
+    (dict(elastic=ElasticSpec(capacity_slack=0.5)), "capacity_slack"),
+    (dict(checkpoint=CheckpointSpec(resume=True)), "ckpt-dir"),
+    (dict(policy=PolicySpec("fixed_steps",
+                            veto=(PolicySpec("two_track"),))), "primary"),
+    (dict(data=DataSpec(kind="lm")), "ModelSpec"),
+    (dict(optimizer=OptimizerSpec("adamw_lm")), "batch optimizer"),
+    (dict(data=DATA.replace(kind="nope")), "convex.*lm"),
+    (dict(schedule=ScheduleSpec(n0=32, step_cost="nope")), "step_cost"),
+])
+def test_bad_combos_fail_at_build(mutate, match):
+    with pytest.raises(SpecError, match=match):
+        build(_spec(**mutate))
+
+
+def test_lm_combos_fail_at_build():
+    lm = dict(data=DataSpec(kind="lm", plane="plane"), model=ModelSpec(),
+              optimizer=OptimizerSpec("adamw_lm", {"batch_size": 8}))
+    with pytest.raises(SpecError, match="unknown arch"):
+        build(_spec(**{**lm, "model": ModelSpec(arch="nope")}))
+    with pytest.raises(SpecError, match="split evenly"):
+        build(_spec(**{**lm, "topology": TopologySpec(hosts=3)}))
+    with pytest.raises(SpecError, match="non-empty"):
+        build(_spec(**{**lm, "topology": TopologySpec(hosts=8)},
+                    schedule=ScheduleSpec(n0=4)))
+    with pytest.raises(SpecError, match="per-example"):
+        build(_spec(**{**lm, "policy": PolicySpec("gradient_variance")}))
+    with pytest.raises(ValueError, match="fault"):
+        build(_spec(elastic=ElasticSpec(faults=("explode@1:0",)),
+                    topology=TopologySpec(hosts=2),
+                    data=DATA.replace(plane="plane")))
+    with pytest.raises(SpecError, match="targets host"):
+        build(_spec(elastic=ElasticSpec(faults=("kill@1:7",)),
+                    topology=TopologySpec(hosts=2),
+                    data=DATA.replace(plane="plane")))
+
+
+# ---------------------------------------------------------- composed policy
+def _records(steps: int, *, var: float = 0.0, g2: float = 1.0):
+    rec = StageRecords()
+    rec.add_chunk(np.zeros(steps, np.float32))
+    rec.var, rec.g2 = var, g2
+    return rec
+
+
+def test_composed_policy_veto_and_any_of():
+    info = StageInfo(stage=0, n_t=32, n_prev=32, is_final=False, N=64)
+    primary = FixedSteps(inner_steps=2, final_steps=3)
+    veto = GradientVariance(theta=0.5, min_stage_steps=1)
+    comp = ComposedPolicy(primary, vetoes=(veto,))
+    # primary proposes after its chunk, but the veto holds while the
+    # window's gradient still has signal (var <= theta^2 g2)
+    assert not comp.should_expand(info, _records(2, var=0.0, g2=1.0))
+    assert comp.should_expand(info, _records(2, var=1.0, g2=1.0))
+    # any_of forces expansion on its own
+    forced = ComposedPolicy(TwoTrack(final_steps=3),
+                            any_of=(GradientVariance(theta=0.5,
+                                                     min_stage_steps=1),))
+    assert forced.should_expand(info, _records(2, var=1.0, g2=1.0))
+    # unknown attributes delegate to the primary (engine lookups)
+    assert comp.inner_steps == 2
+    assert forced.max_stage_iters == TwoTrack().max_stage_iters
+    assert comp.wants_variance and comp.probe == veto.probe
+
+
+def test_composed_policy_only_primary_may_race():
+    with pytest.raises(ValueError, match="primary"):
+        ComposedPolicy(FixedSteps(), vetoes=(TwoTrack(),))
+
+
+def test_spec_built_composition_runs_and_expands():
+    spec = _spec(policy=PolicySpec(
+        "fixed_steps", {"inner_steps": 2, "final_steps": 2},
+        veto=(PolicySpec("gradient_variance",
+                         {"theta": 0.9, "probe": 32,
+                          "min_stage_steps": 1}),)))
+    sess = build(spec)
+    assert isinstance(sess.policy, ComposedPolicy)
+    tr = sess.run()
+    assert tr.final().window == sess.dataset.n     # reached the full data
+    assert tr.meta["policy"].startswith("composed(")
+
+
+def test_spec_built_two_track_with_veto_races_multiple_rounds():
+    spec = _spec(policy=PolicySpec(
+        "two_track", {"final_steps": 2, "max_stage_iters": 4},
+        veto=(PolicySpec("gradient_variance",
+                         {"theta": 0.05, "probe": 32,
+                          "min_stage_steps": 1,
+                          "max_stage_iters": 12}),)))
+    sess = build(spec)
+    tr = sess.run()
+    assert tr.final().window == sess.dataset.n
+    # the veto held at least one racing stage open past a single race
+    # round (more race-kernel pulls than a plain TwoTrack would issue)
+    plain = build(_spec(policy=PolicySpec(
+        "two_track", {"final_steps": 2, "max_stage_iters": 4})))
+    tr_plain = plain.run()
+    assert tr.meta["host_transfers"] > tr_plain.meta["host_transfers"]
+
+
+# ------------------------------------------------------------------ parity
+def test_deprecated_wrappers_match_spec_sessions_bit_exactly():
+    from repro.core import (BETSchedule, SimulatedClock, run_batch,
+                            run_bet_fixed, run_two_track)
+    from repro.optim import NewtonCG
+    ds, obj, w0 = convex_problem(DATA)
+    opt = NewtonCG(hessian_fraction=1.0)
+    sched = BETSchedule(n0=32)
+
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        tr_old = run_bet_fixed(ds, opt, obj, schedule=sched, inner_steps=2,
+                               final_steps=3, clock=SimulatedClock(), w0=w0)
+    tr_new = build(_spec()).run()
+    for col in ("f_window", "f_full", "time", "accesses"):
+        assert tr_old.column(col) == tr_new.column(col)
+
+    with pytest.warns(DeprecationWarning):
+        tr_old = run_two_track(ds, opt, obj, schedule=sched, final_steps=3,
+                               clock=SimulatedClock(), w0=w0)
+    tr_new = build(_spec(policy=PolicySpec("two_track",
+                                           {"final_steps": 3}))).run()
+    for col in ("f_window", "f_full", "time", "accesses"):
+        assert tr_old.column(col) == tr_new.column(col)
+
+    with pytest.warns(DeprecationWarning):
+        tr_old = run_batch(ds, opt, obj, steps=4, clock=SimulatedClock(),
+                           w0=w0)
+    tr_new = build(_spec(policy=PolicySpec("batch", {"steps": 4}))).run()
+    for col in ("f_window", "f_full", "time", "accesses"):
+        assert tr_old.column(col) == tr_new.column(col)
+
+
+def test_expanding_window_shim_warns():
+    from repro.data.window import ExpandingWindow
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        win = ExpandingWindow(np.zeros((16, 4), np.int32), n0=4)
+    assert win.n_t == 4                     # still bit-exact semantics
+    assert win.grow() == 8
+
+
+# ----------------------------------------------------------------- session
+def test_session_surface_plan_stages_meters():
+    sess = build(_spec())
+    plan = sess.stage_plan()
+    assert [i.n_t for i in plan][-1] == sess.dataset.n
+    tr = sess.run()
+    assert sess.trace is tr
+    assert len(sess.stage_ends) == tr.meta["stages"]
+    assert [s["n_t"] for s in sess.stage_ends] == [i.n_t for i in plan]
+    assert sess.meters["clock"]["time"] == sess.clock.time
+    assert sess.meters["clock"]["accesses"] == tr.final().accesses
+
+
+def test_checkpoint_carries_spec_and_resume_reproduces(tmp_path):
+    spec = _spec(checkpoint=CheckpointSpec(directory=str(tmp_path)))
+    ref = build(_spec()).run()
+
+    class _Killed(Exception):
+        pass
+
+    sess = build(spec)
+
+    def die(end):
+        if end.info.stage == 1:
+            raise _Killed
+
+    sess.on_stage(die)
+    with pytest.raises(_Killed):
+        sess.run()
+
+    resumed = build(spec.replace(
+        checkpoint=CheckpointSpec(directory=str(tmp_path), resume=True)))
+    tr_b = resumed.run()
+    # the checkpoint is self-describing: the spec rides in its meta
+    assert resumed.restored.meta["spec"] == spec.to_dict()
+    stitched = [p["f_full"] for p in resumed.restored.trace_points()] + \
+        tr_b.column("f_full")
+    assert stitched == ref.column("f_full")
+    assert [p["time"] for p in resumed.restored.trace_points()] + \
+        tr_b.column("time") == ref.column("time")
+
+
+def test_dry_run_prints_spec(capsys):
+    import repro.launch.train as train
+    import sys
+    argv = sys.argv
+    sys.argv = ["train", "--dry-run", "--corpus", "64", "--seq-len", "16",
+                "--n0", "16", "--final-steps", "2", "--inner-steps", "1"]
+    try:
+        train.main()
+    finally:
+        sys.argv = argv
+    out = capsys.readouterr().out
+    assert '"kind": "lm"' in out and "stage 0: window 16" in out

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1
+
 pytest.importorskip("hypothesis",
                     reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st
