@@ -30,7 +30,7 @@ MODULES = ["fig2_simulated_runtime", "fig3_wallclock", "fig4_hw_accel",
            "fig5_parallel", "fig6_test_acc", "fig7_inner_opt",
            "fig8_dsm_theta", "table1_time_model", "thm41_data_access",
            "ablation_schedule", "bench_engine", "bench_data", "bench_dist",
-           "bench_elastic", "roofline"]
+           "bench_elastic", "bench_serve", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -44,6 +44,9 @@ SMOKE_ARGS = {
     "bench_dist": ["--scale", "0.05", "--shard-size", "64",
                    "--delay-ms", "0.2"],
     "bench_elastic": ["--scale", "0.05", "--slow-s", "2.0"],
+    # mirrors the smallest closed loop that still swaps >= 2 times
+    "bench_serve": ["--capacity", "96", "--n0", "16", "--shard-size", "8",
+                    "--rpt", "8", "--eval-rows", "16", "--batch-size", "4"],
 }
 
 

@@ -6,18 +6,20 @@
 # printed by --dry-run).
 from .specs import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
                     OptimizerSpec, PolicySpec, RunSpec, ScheduleSpec,
-                    SpecError, TopologySpec)
+                    ServeSpec, SpecError, TopologySpec)
 from .registry import (OPTIMIZERS, POLICIES, STORES, TOPOLOGIES,
                        build_optimizer, build_policy, make_store,
                        optimizer_spec_of, register_optimizer,
                        register_policy, register_store)
-from .session import Session, build, convex_problem
+from .session import (Session, build, check_resume_spec, convex_problem,
+                      resume_session)
 from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
 
 __all__ = [
     "RunSpec", "DataSpec", "PolicySpec", "OptimizerSpec", "ScheduleSpec",
-    "TopologySpec", "ElasticSpec", "CheckpointSpec", "ModelSpec",
-    "SpecError", "Session", "build", "convex_problem",
+    "TopologySpec", "ElasticSpec", "CheckpointSpec", "ServeSpec",
+    "ModelSpec", "SpecError", "Session", "build", "convex_problem",
+    "resume_session", "check_resume_spec",
     "POLICIES", "OPTIMIZERS", "STORES", "TOPOLOGIES",
     "build_policy", "build_optimizer", "optimizer_spec_of", "make_store",
     "register_policy", "register_optimizer", "register_store",

@@ -16,6 +16,7 @@ from ..data.shards import InMemoryShardStore, MemmapShardStore, ThrottledStore
 from ..dist.topology import ProcessTopology, SimulatedTopology
 from ..optim import REGISTRY as _OPTIM_REGISTRY
 from ..optim.api import BatchOptimizer
+from ..serve.policy import TrafficDriven
 from .specs import OptimizerSpec, PolicySpec, SpecError
 
 
@@ -57,6 +58,7 @@ POLICIES = Registry("policy", {
     "two_track": TwoTrack,
     "bet_gradvar": GradientVariance,
     "gradient_variance": GradientVariance,
+    "traffic_driven": TrafficDriven,
 })
 
 # --------------------------------------------------------------- optimizers

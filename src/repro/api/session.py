@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import pathlib
 from typing import Callable
 
 import jax
@@ -37,6 +38,7 @@ from ..dist.collectives import distributed_objective, l2_regularizer
 from ..dist.runtime import DistributedBetEngine, DistributedDataset
 from ..elastic import (ElasticBetEngine, ElasticDataset, FaultPlan,
                        StageCheckpointer)
+from ..elastic.checkpoint import peek_stage_meta
 from ..launch import steps
 from ..launch.mesh import axis_size, dp_axes, make_host_mesh
 from ..models import transformer as T
@@ -174,6 +176,12 @@ def _validate(spec: RunSpec) -> None:
     if spec.checkpoint.resume and not spec.checkpoint.directory:
         raise SpecError("CheckpointSpec.resume needs a checkpoint "
                         "directory (--ckpt-dir) to restore from")
+    if spec.serve.enabled:
+        raise SpecError(
+            "ServeSpec.enabled describes the serve-while-you-train closed "
+            "loop; build it with repro.serve.build_loop(spec), not "
+            "repro.api.build — the training corpus is the live request "
+            "log, which an offline session cannot reconstruct")
 
 
 def _validate_policy(spec: RunSpec, policy) -> None:
@@ -378,6 +386,58 @@ def build(spec: RunSpec | dict) -> "Session":
     return _build_convex(spec, policy)
 
 
+# --------------------------------------------------------------------- resume
+# the spec fields that determine what a checkpoint's numbers *mean*: the
+# corpus and its serving layer, the host topology, the model shapes and the
+# stage schedule.  A resume under different values of any of these would
+# restore cursors/meters into a silently different run.
+_RESUME_CRITICAL = ("data", "topology", "model", "schedule")
+
+
+def check_resume_spec(spec: RunSpec, stored: dict) -> None:
+    """Raise :class:`SpecError` when the caller-supplied spec disagrees
+    with the spec stored in the checkpoint on any resume-critical field."""
+    have = spec.to_dict()
+    bad = [k for k in _RESUME_CRITICAL if have.get(k) != stored.get(k)]
+    if bad:
+        detail = "; ".join(
+            f"{k}: checkpoint has {stored.get(k)!r}, caller has "
+            f"{have.get(k)!r}" for k in bad)
+        raise SpecError(
+            f"resume spec mismatch on {bad}: the checkpoint was taken "
+            f"under a different {'/'.join(bad)} configuration — resume "
+            f"with repro.api.resume_session(directory) to rebuild from "
+            f"the stored spec, or fix the caller spec ({detail})")
+
+
+def resume_session(directory) -> "Session":
+    """Build a :class:`Session` entirely from the spec stored in the
+    latest stage checkpoint under ``directory`` — the checkpoint, not the
+    caller, says what the run is.  The session is returned ready to
+    ``run()`` (its spec has ``checkpoint.resume=True``)."""
+    d = pathlib.Path(directory)
+    ckpts = sorted(d.glob("stage_*.npz"))
+    if not ckpts:
+        raise FileNotFoundError(f"no stage checkpoint under {d}")
+    stored = peek_stage_meta(ckpts[-1].with_suffix("")).get("spec")
+    if stored is None:
+        raise SpecError(
+            f"checkpoint {ckpts[-1]} carries no spec (it was saved by a "
+            f"bare StageCheckpointer, not a Session) — rebuild the stack "
+            f"explicitly and call Session.resume()")
+    spec = RunSpec.from_dict(stored)
+    if spec.serve.enabled:
+        raise SpecError(
+            "this checkpoint belongs to a serve-while-you-train run: its "
+            "corpus is the live request log, which a spec rebuild cannot "
+            "regenerate — restore through "
+            "repro.elastic.checkpoint.load_stage_checkpoint over the "
+            "closed log instead")
+    spec = spec.replace(checkpoint=spec.checkpoint.replace(
+        directory=str(d), resume=True))
+    return build(spec)
+
+
 # -------------------------------------------------------------------- session
 class Session:
     """The composed BET stack for one RunSpec.
@@ -455,6 +515,18 @@ class Session:
         reported as ``trace.meta['resume_rewarm']``)."""
         if self.checkpointer is None:
             raise SpecError("resume needs CheckpointSpec.directory")
+        latest = self.checkpointer.latest()
+        if latest is None:
+            raise FileNotFoundError(
+                f"resume: no stage checkpoint under "
+                f"{self.spec.checkpoint.directory}")
+        # the checkpoint's stored spec, not the caller's word, decides
+        # whether this session matches the checkpointed run — a divergent
+        # data/topology/model/schedule would silently re-interpret the
+        # restored cursors and meters
+        stored = peek_stage_meta(latest).get("spec")
+        if stored is not None:
+            check_resume_spec(self.spec, stored)
         restored = self.checkpointer.restore(
             self.w0, self.optimizer.init(self.w0))
         if restored is None:

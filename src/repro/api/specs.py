@@ -227,6 +227,27 @@ class CheckpointSpec(_Spec):
     resume: bool = False
 
 
+# -------------------------------------------------------------------- serve
+@dataclasses.dataclass(frozen=True)
+class ServeSpec(_Spec):
+    """The serve-while-you-train closed loop (``repro.serve``): synthetic
+    traffic through the seed decode path, every served request logged into
+    an online ingestion store, a traffic-driven policy expanding the BET
+    window as requests land, and the server hot-swapping each published
+    stage checkpoint.  Requires ``DataSpec(kind="lm", plane="plane")`` and
+    a :class:`ModelSpec`; the logged row length must tile the training
+    rows exactly: ``prompt_len + gen_tokens == data.seq_len + 1``
+    (``gen_tokens=0`` derives it)."""
+    enabled: bool = False
+    requests_per_tick: int = 4      # prompt batch rows per serving tick
+    prompt_len: int = 16
+    gen_tokens: int = 0             # 0: derived as seq_len + 1 - prompt_len
+    capacity: int = 0               # log bound; 0: data.corpus_size
+    swap: bool = True               # poll + hot-swap stage checkpoints
+    greedy: bool = True             # greedy decode (False: sampled)
+    seed: int = 0
+
+
 # -------------------------------------------------------------------- model
 @dataclasses.dataclass(frozen=True)
 class ModelSpec(_Spec):
@@ -257,6 +278,7 @@ class RunSpec(_Spec):
     elastic: ElasticSpec = dataclasses.field(default_factory=ElasticSpec)
     checkpoint: CheckpointSpec = dataclasses.field(
         default_factory=CheckpointSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
     model: ModelSpec | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
@@ -268,6 +290,7 @@ class RunSpec(_Spec):
         _coerce(self, "topology", TopologySpec)
         _coerce(self, "elastic", ElasticSpec)
         _coerce(self, "checkpoint", CheckpointSpec)
+        _coerce(self, "serve", ServeSpec)
         if isinstance(self.model, dict):
             _set(self, model=ModelSpec.from_dict(self.model))
         _set(self, meta=dict(self.meta))

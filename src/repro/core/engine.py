@@ -574,6 +574,90 @@ class BetEngine:
         trace.meta["stages"] = run_ctx["stages"]
         return trace
 
+    # ------------------------------------------------------------ online runs
+    def run_online(self, dataset, optimizer: BatchOptimizer,
+                   objective: Objective, policy: ExpansionPolicy, *,
+                   source=None, w0=None, clock: SimulatedClock | None = None,
+                   eval_data=None, probe: Callable | None = None,
+                   trace_name: str | None = None, meta: dict | None = None,
+                   progress: Callable | None = None, opt_state0=None,
+                   max_stages: int = 10_000) -> Trace:
+        """``run`` over a corpus still *arriving* (serve-while-you-train).
+
+        ``run`` precomputes the stage plan from ``dataset.n`` once; here the
+        corpus size is discovered as the serving path logs requests, so the
+        stage plan is built one stage at a time: each stage targets
+        ``n_next = ceil(growth * n_t)`` and the policy (normally
+        serve/policy.TrafficDriven) *holds the stage open* — more inner
+        steps on the current window — until enough new examples have been
+        sealed to honor that target, or the ``source`` store closes.  Once
+        the source is closed and the window covers everything sealed, one
+        final full-window stage runs and the loop ends — from there the
+        trace is indistinguishable from an offline ``run`` whose schedule
+        happened to emit the same windows (expansion stayed append-only).
+
+        ``eval_data`` is required: with the corpus still arriving there is
+        no full-window f̂ to fall back to.  Two-track policies are rejected
+        — the race kernel needs the *next* window resident up front, which
+        is exactly what an online corpus cannot promise.
+        """
+        if eval_data is None:
+            raise ValueError(
+                "run_online requires eval_data: the full corpus is not "
+                "available for f̂ while data is still arriving")
+        if policy.kind == "two_track":
+            raise ValueError(
+                f"policy {policy.name!r} is two_track-kind: the race needs "
+                f"next-window residency up front; run_online supports only "
+                f"scan policies")
+        if dataset.n < 1:
+            raise ValueError(
+                "run_online needs at least one sealed example before "
+                "training starts (seed the source first)")
+        clock = clock or SimulatedClock()
+        w = w0 if w0 is not None else jnp.zeros((dataset.d,), jnp.float32)
+        w = jax.tree_util.tree_map(jnp.array, w)
+        state = optimizer.init(w) if opt_state0 is None else \
+            jax.tree_util.tree_map(jnp.array, opt_state0)
+        trace = Trace(trace_name or policy.name,
+                      meta={"engine": "BetEngine.online",
+                            "policy": policy.name,
+                            "optimizer": optimizer.name, **(meta or {})})
+        cost = self.step_cost or (lambda n: n)
+        run_ctx = {"trace": trace, "clock": clock, "cost": cost,
+                   "probe": probe, "progress": progress, "dataset": dataset,
+                   "step_count": 0, "transfers": 0, "stages": 0}
+        growth = self.schedule.growth
+        stage = 0
+        n_t = min(self.schedule.n0, dataset.n)
+        n_prev = n_t
+        while True:
+            closed = bool(getattr(source, "closed", True))
+            is_final = closed and n_t >= dataset.n
+            n_next = None if is_final else \
+                max(n_t + 1, int(math.ceil(n_t * growth)))
+            info = StageInfo(stage=stage, n_t=n_t, n_prev=n_prev,
+                             is_final=is_final, N=dataset.n, n_next=n_next)
+            state = optimizer.reset_memory(state)
+            w, state = self._run_scan_stage(
+                run_ctx, dataset, optimizer, objective, policy, info,
+                w, state, eval_data)
+            if is_final:
+                break
+            # the stage was held open until the target (or close) landed;
+            # clip to what is actually sealed now
+            n_prev, n_t = n_t, min(dataset.n, n_next)
+            stage += 1
+            if stage > max_stages:
+                raise RuntimeError(
+                    f"run_online exceeded {max_stages} stages without the "
+                    f"source closing")
+        trace.params = w
+        trace.meta["host_transfers"] = run_ctx["transfers"]
+        trace.meta["stages"] = run_ctx["stages"]
+        trace.meta["final_n"] = dataset.n
+        return trace
+
     # ---------------------------------------------------------- stage windows
     def stage_infos(self, policy: ExpansionPolicy, N: int) -> list[StageInfo]:
         """The stages a run of ``policy`` over ``N`` examples executes, in

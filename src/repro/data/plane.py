@@ -77,8 +77,12 @@ class StreamingDataset:
             shardings = tuple(
                 _fit_sharding(shardings, 1 + len(s.item_shape))
                 for s in stores)
+        # an online store (serve/ingest.py) reports sealed examples in
+        # num_examples but preallocates residency at its eventual capacity —
+        # expansion then stays in-place append even as the corpus arrives
         self.windows = tuple(
-            DeviceWindow(capacity=s.num_examples, item_shape=s.item_shape,
+            DeviceWindow(capacity=getattr(s, "capacity", s.num_examples),
+                         item_shape=s.item_shape,
                          dtype=s.dtype, growth=growth, sharding=sh,
                          meter=self.meter, meter_examples=i == 0)
             for i, (s, sh) in enumerate(zip(stores, shardings)))

@@ -144,9 +144,14 @@ class ShardOwnership(OwnershipAlgebra):
     @classmethod
     def for_store(cls, store: ShardStore, num_hosts: int,
                   strategy: str = "striped") -> "ShardOwnership":
-        return cls(num_shards=store.num_shards, num_hosts=num_hosts,
+        """Sized at the store's eventual ``capacity`` when it has one (an
+        online store still ingesting): the map is fixed once at the bound,
+        so data arrival only ever *appends* to each host's local window and
+        the prefix invariant extends to a corpus discovered at runtime."""
+        n = int(getattr(store, "capacity", store.num_examples))
+        return cls(num_shards=-(-n // store.shard_size), num_hosts=num_hosts,
                    shard_size=store.shard_size,
-                   num_examples=store.num_examples, strategy=strategy)
+                   num_examples=n, strategy=strategy)
 
     # ----------------------------------------------------------------- basics
     def owner(self, shard: int) -> int:
@@ -283,10 +288,11 @@ class OwnedShardStore(ShardStore):
 
     def __init__(self, inner: ShardStore, ownership: ShardOwnership,
                  host: int):
+        cap = int(getattr(inner, "capacity", inner.num_examples))
         if inner.shard_size != ownership.shard_size or \
-                inner.num_examples != ownership.num_examples:
+                cap != ownership.num_examples:
             raise ValueError(
-                f"store ({inner.num_examples} examples / shard_size "
+                f"store ({cap} examples / shard_size "
                 f"{inner.shard_size}) does not match ownership "
                 f"({ownership.num_examples} / {ownership.shard_size})")
         self._inner = inner

@@ -17,6 +17,8 @@ the exact carries the next stage starts from.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import pathlib
 
 from ..checkpoint.ckpt import load_state, save_state
@@ -159,6 +161,12 @@ class StageCheckpointer:
     def save(self, end: StageEnd) -> pathlib.Path:
         d = pathlib.Path(self.directory)
         path = d / f"stage_{end.info.stage:04d}"
+        # publish atomically: write under a dot-prefixed temp name (invisible
+        # to the stage_*.npz glob), then os.replace into place — a concurrent
+        # reader (the hot-swap server, serve/swap.py) either sees the full
+        # checkpoint or none of it.  The .json lands before the .npz because
+        # readers key on the .npz: once it appears, its sidecar exists.
+        tmp = d / f".tmp_{path.name}"
         meta = {
             "cursor": {"stage": end.info.stage, "n_t": end.info.n_t,
                        "n_next": end.info.n_next, "step": end.step_count,
@@ -170,8 +178,10 @@ class StageCheckpointer:
         }
         if self.spec is not None:
             meta["spec"] = self.spec
-        save_state(path, {"params": end.params, "opt": end.opt_state},
+        save_state(tmp, {"params": end.params, "opt": end.opt_state},
                    meta=meta)
+        os.replace(tmp.with_suffix(".json"), path.with_suffix(".json"))
+        os.replace(tmp.with_suffix(".npz"), path.with_suffix(".npz"))
         self.saved.append(end.info.stage)
         ckpts = sorted(d.glob("stage_*.npz"))
         for old in ckpts[: -self.keep]:
@@ -188,6 +198,14 @@ class StageCheckpointer:
         if latest is None:
             return None
         return load_stage_checkpoint(latest, params_like, opt_like)
+
+
+def peek_stage_meta(path) -> dict:
+    """A stage checkpoint's sidecar metadata (cursor/clock/dataset/spec)
+    without loading any arrays — spec validation and the hot-swap server's
+    staleness bookkeeping read this."""
+    sidecar = json.loads(pathlib.Path(path).with_suffix(".json").read_text())
+    return sidecar["meta"]
 
 
 def load_stage_checkpoint(path, params_like, opt_like=None) -> "RestoredRun":

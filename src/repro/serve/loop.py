@@ -1,0 +1,288 @@
+"""ServeTrainLoop — the closed loop: traffic → serve → log → ingest →
+expand → swap.
+
+This is ROADMAP item 4 end to end.  A ``BetServer`` answers synthetic
+traffic through the seed decode path; every served request (prompt +
+generated continuation) is logged, in arrival order, into an
+``OnlineShardStore`` — the corpus *is* the request log, and BET's nested
+prefix windows make that legal (expansion is append, never reshuffle).  A
+``TrafficDriven`` policy expands the training window as requests land,
+holding stages open (and pumping more traffic) while arrivals lag the
+schedule; every stage boundary publishes an atomic checkpoint that the
+server hot-swaps without dropping an in-flight request.
+
+The loop is described by an ordinary :class:`~repro.api.RunSpec` with
+``serve.enabled=True`` — ``build_loop(spec)`` is the front door
+(``repro.api.build`` refuses serve specs and points here).  The training
+stack is composed from the same pieces a Session uses: StreamingDataset
+(masked plane), LMStepOptimizer, make_lm_objective, build_policy,
+StageCheckpointer, BetEngine — only the corpus and the stage loop differ
+(``BetEngine.run_online``)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..api.lm import LMStepOptimizer, make_lm_objective
+from ..api.registry import LM_OPTIMIZER, build_policy
+from ..api.specs import RunSpec, SpecError
+from ..core.engine import BETSchedule, BetEngine
+from ..core.timemodel import SimulatedClock
+from ..data.plane import StreamingDataset
+from ..elastic import StageCheckpointer
+from ..launch import steps
+from ..models import transformer as T
+from .ingest import OnlineShardStore
+from .policy import TrafficDriven
+from .swap import BetServer, CheckpointWatcher
+
+
+class TrafficGenerator:
+    """Deterministic synthetic traffic: Zipf-distributed prompts (the same
+    family as data/window.synth_corpus, so the logged corpus looks like the
+    offline LM workload)."""
+
+    def __init__(self, vocab: int, prompt_len: int, batch: int, *,
+                 seed: int = 0, alpha: float = 1.2):
+        self.vocab = max(2, int(vocab))
+        self.prompt_len = int(prompt_len)
+        self.batch = int(batch)
+        self.rng = np.random.default_rng(seed)
+        self.alpha = float(alpha)
+
+    def next(self) -> np.ndarray:
+        z = self.rng.zipf(self.alpha, size=(self.batch, self.prompt_len))
+        return ((z - 1) % self.vocab).astype(np.int32)
+
+
+def _traffic_members(policy) -> list[TrafficDriven]:
+    """Every TrafficDriven member of a (possibly composed) policy tree."""
+    members = [policy, getattr(policy, "primary", None)]
+    members += list(getattr(policy, "vetoes", ()))
+    members += list(getattr(policy, "any_of", ()))
+    return [p for p in members if isinstance(p, TrafficDriven)]
+
+
+def _attach_traffic(policy, source, pump) -> list[TrafficDriven]:
+    """Wire the live store/pump into every TrafficDriven member of a
+    (possibly composed) policy tree; returns the wired members."""
+    wired = _traffic_members(policy)
+    for p in wired:
+        p.attach(source, pump)
+    return wired
+
+
+def _validate_serve(spec: RunSpec) -> tuple[int, int]:
+    s, d = spec.serve, spec.data
+    if not s.enabled:
+        raise SpecError("build_loop needs ServeSpec.enabled=True")
+    if d.kind != "lm" or spec.model is None:
+        raise SpecError("the serve loop decodes an LM: DataSpec.kind='lm' "
+                        "plus a ModelSpec are required")
+    if d.plane != "plane":
+        raise SpecError("the serve loop ingests through the streaming "
+                        "plane: DataSpec.plane='plane'")
+    if spec.optimizer.name != LM_OPTIMIZER:
+        raise SpecError(f"the serve loop trains through {LM_OPTIMIZER!r}, "
+                        f"got {spec.optimizer.name!r}")
+    if spec.topology.hosts != 1:
+        raise SpecError("the serve loop is single-host (the multi-host "
+                        "runtime serves offline corpora)")
+    if not spec.checkpoint.directory:
+        raise SpecError("the serve loop publishes stage checkpoints for "
+                        "the hot-swap server: CheckpointSpec.directory is "
+                        "required")
+    if s.requests_per_tick < 1 or s.prompt_len < 1:
+        raise SpecError("requests_per_tick and prompt_len must be >= 1")
+    gen = s.gen_tokens or (d.seq_len + 1 - s.prompt_len)
+    if gen < 1:
+        raise SpecError(f"prompt_len={s.prompt_len} leaves no room to "
+                        f"generate in a {d.seq_len + 1}-token training row")
+    if s.prompt_len + gen != d.seq_len + 1:
+        raise SpecError(
+            f"logged rows must tile training rows exactly: prompt_len + "
+            f"gen_tokens must equal seq_len + 1 "
+            f"({s.prompt_len} + {gen} != {d.seq_len + 1})")
+    capacity = s.capacity or d.corpus_size
+    if capacity < spec.schedule.n0:
+        raise SpecError(f"capacity={capacity} below n0={spec.schedule.n0}: "
+                        f"the first stage could never fill")
+    return gen, capacity
+
+
+class ServeTrainLoop:
+    """One serve-while-you-train run: own the server, the request log, and
+    the BET training stack; ``run()`` drives them to completion."""
+
+    def __init__(self, spec: RunSpec, *, max_ticks: int | None = None):
+        self.gen_tokens, self.capacity = _validate_serve(spec)
+        self.spec = spec
+        d, m, s = spec.data, spec.model, spec.serve
+        cfg = configs.get(m.arch)
+        if m.reduced:
+            cfg = configs.reduced(cfg)
+        if m.overrides:
+            cfg = cfg.with_(**m.overrides)
+        if cfg.input_mode != "tokens":
+            raise SpecError(f"{m.arch} is not a token-mode arch; the serve "
+                            f"loop decodes tokens")
+        self.cfg = cfg
+        self.params0 = T.init_params(cfg, jax.random.key(d.seed))
+        self.store = OnlineShardStore(
+            (d.seq_len + 1,), np.int32, shard_size=d.shard_size,
+            capacity=self.capacity)
+        self.server = BetServer(cfg, self.params0,
+                                cache_len=d.seq_len + 1, stage=-1)
+        self.watcher = CheckpointWatcher(
+            spec.checkpoint.directory, self.params0, self.server) \
+            if s.swap else None
+        self.traffic = TrafficGenerator(
+            cfg.vocab_size, s.prompt_len, s.requests_per_tick, seed=s.seed)
+        # tick budget: enough traffic to fill the log twice over — a
+        # backstop that closes the source rather than hanging a held stage
+        self.max_ticks = max_ticks if max_ticks is not None else \
+            2 * (self.capacity // s.requests_per_tick + 1)
+        self.ticks = 0
+        self._key = jax.random.key(s.seed + 1)
+        self.staleness_warm: list[int] = []
+        self.serve_wall_s = 0.0     # generate + log + swap-poll, per tick
+        self.trace = None
+
+    # ------------------------------------------------------------- serving
+    def tick(self) -> bool:
+        """One serving tick: answer a prompt batch, log it, poll for fresh
+        weights.  Returns False once the log is closed (no more traffic)."""
+        if self.store.closed:
+            return False
+        if self.ticks >= self.max_ticks or \
+                self.store.total_logged + self.traffic.batch > self.capacity:
+            self.store.close()
+            if self.watcher is not None:
+                self.watcher.poll()
+            return False
+        self.ticks += 1
+        t0 = time.perf_counter()
+        prompts = self.traffic.next()
+        if self.spec.serve.greedy:
+            out = self.server.generate(jnp.asarray(prompts),
+                                       gen_tokens=self.gen_tokens)
+        else:
+            self._key, sub = jax.random.split(self._key)
+            out = self.server.generate(jnp.asarray(prompts),
+                                       gen_tokens=self.gen_tokens,
+                                       greedy=False, key=sub)
+        self.store.append(
+            np.concatenate([prompts, np.asarray(out)], axis=1))
+        if self.watcher is not None:
+            # sampled before the poll: the weights this tick's request was
+            # actually served under, vs the newest published checkpoint
+            if self.server.swap_count > 0:
+                self.staleness_warm.append(self.watcher.staleness())
+            self.watcher.poll()
+        self.serve_wall_s += time.perf_counter() - t0
+        return True
+
+    # ------------------------------------------------------------ training
+    def run(self) -> dict:
+        """Seed the log, train-while-serving, drain, report."""
+        spec, d = self.spec, self.spec.data
+        n0 = spec.schedule.n0
+        eval_rows = min(d.eval_rows, n0)
+        # seed phase: enough sealed traffic for the first window + probe
+        while self.store.num_examples < max(n0, eval_rows):
+            if not self.tick():
+                break
+        if self.store.num_examples < 1:
+            raise SpecError("the log closed before any shard sealed: raise "
+                            "capacity or lower shard_size")
+        eval_tokens = jnp.asarray(
+            self.store.prefix(min(eval_rows, self.store.num_examples)))
+        dataset = StreamingDataset([self.store], masked=True,
+                                   growth=spec.schedule.growth,
+                                   prefetch_workers=d.prefetch_workers)
+        lr = float(spec.optimizer.params.get("lr", 1e-3))
+        batch_size = int(spec.optimizer.params.get("batch_size", 8))
+        optimizer = LMStepOptimizer(
+            train_step=steps.make_train_step(self.cfg, lr=lr),
+            init_opt=steps.init_opt_state, batch_size=batch_size)
+        objective = make_lm_objective(self.cfg,
+                                      int(eval_tokens.shape[0]))
+        policy = build_policy(spec.policy)
+        wired = _attach_traffic(policy, self.store, self.tick)
+        if not wired:
+            raise SpecError(
+                f"the serve loop needs a traffic_driven policy somewhere "
+                f"in the composition (got {policy.name!r}): nothing else "
+                f"pumps traffic while a stage holds")
+        checkpointer = StageCheckpointer(
+            spec.checkpoint.directory, keep=spec.checkpoint.keep,
+            every=spec.checkpoint.every, spec=spec.to_dict())
+        engine = BetEngine(
+            schedule=BETSchedule(n0=min(n0, self.store.num_examples),
+                                 growth=spec.schedule.growth),
+            step_cost=(lambda n_t: batch_size)
+            if spec.schedule.step_cost == "batch" else None,
+            carry_state=spec.schedule.carry_state)
+        engine.stage_callback = checkpointer
+        clock = SimulatedClock(**spec.schedule.clock)
+        try:
+            self.trace = engine.run_online(
+                dataset, optimizer, objective, policy,
+                source=self.store, w0=self.params0, clock=clock,
+                eval_data=eval_tokens,
+                trace_name=None if spec.name == "run" else spec.name,
+                meta={"arch": self.cfg.name, "serve": True})
+        finally:
+            self.store.close()
+            dataset.close()
+        self.final_clock = clock.snapshot()
+        # drain: adopt the final published checkpoint (staleness -> 0).
+        # No traffic flows here, so these polls add no warm staleness
+        # samples — those measure the weights *served requests* saw
+        while self.watcher is not None and self.watcher.staleness() > 0:
+            if not self.watcher.poll():
+                break
+        return self.report(dataset, policy, checkpointer, clock)
+
+    # ------------------------------------------------------------- results
+    def report(self, dataset, policy, checkpointer, clock) -> dict:
+        meter = dataset.meter.snapshot()
+        holds = sum(p.holds_total for p in _traffic_members(policy))
+        rep = {
+            "ticks": self.ticks,
+            "requests": self.server.requests_completed,
+            "logged_examples": self.store.num_examples,
+            "capacity": self.capacity,
+            "serve_wall_s": round(self.serve_wall_s, 4),
+            "tokens_per_s_wall": round(
+                self.server.tokens_generated / max(self.serve_wall_s, 1e-9),
+                2),
+            "stages": self.trace.meta.get("stages") if self.trace else None,
+            "holds": holds,
+            "server": self.server.metrics(),
+            "data_plane": meter,
+            "clock": clock.snapshot(),
+            "checkpoints": list(checkpointer.saved),
+        }
+        if self.watcher is not None:
+            rep["staleness"] = {
+                "samples": self.watcher.staleness_samples,
+                "warm_samples": self.staleness_warm,
+                "max_warm": max(self.staleness_warm, default=0),
+                "final": self.watcher.staleness(),
+                "published_stage": self.watcher.published_stage(),
+                "adopted_stage": self.server.adopted_stage,
+            }
+        return rep
+
+
+def build_loop(spec: RunSpec | dict, **kw) -> ServeTrainLoop:
+    """The serve-while-you-train front door: RunSpec -> ServeTrainLoop."""
+    if isinstance(spec, dict):
+        spec = RunSpec.from_dict(spec)
+    return ServeTrainLoop(spec, **kw)

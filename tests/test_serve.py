@@ -1,0 +1,327 @@
+"""Serve-while-you-train (ROADMAP item 4): online ingestion, the
+traffic-driven expansion policy, hot checkpoint swap, and the closed
+loop behind ``RunSpec.serve``."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.api import (CheckpointSpec, DataSpec, ModelSpec, OptimizerSpec,
+                       PolicySpec, RunSpec, ScheduleSpec, ServeSpec,
+                       SpecError, build, check_resume_spec, resume_session)
+from repro.core.engine import (BETSchedule, BetEngine, FixedSteps, StageEnd,
+                               StageInfo, StageRecords, Trace, TwoTrack)
+from repro.core.timemodel import SimulatedClock
+from repro.data.plane import StreamingDataset
+from repro.dist.ownership import ShardOwnership
+from repro.elastic.checkpoint import (StageCheckpointer, load_stage_checkpoint,
+                                      peek_stage_meta)
+from repro.models import transformer as T
+from repro.serve import (BetServer, CheckpointWatcher, OnlineShardStore,
+                         TrafficDriven, build_loop)
+
+pytestmark = pytest.mark.tier1
+
+
+def _rows(lo, n, width=3):
+    return np.arange(lo, lo + n, dtype=np.int32)[:, None] * \
+        np.ones((1, width), np.int32)
+
+
+# ------------------------------------------------------------ OnlineShardStore
+def test_online_store_exposes_sealed_shards_only():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=16)
+    assert st.append(_rows(0, 3)) == 0          # tail only: nothing sealed
+    assert st.num_examples == 0 and st.total_logged == 3
+    assert st.append(_rows(3, 3)) == 4          # one full shard sealed
+    assert st.total_logged == 6
+    np.testing.assert_array_equal(st.load(0), _rows(0, 4))
+    with pytest.raises(IndexError):
+        st.load(1)                              # tail is not visible
+    np.testing.assert_array_equal(st.prefix(4), _rows(0, 4))
+    with pytest.raises(ValueError):
+        st.prefix(5)                            # beyond sealed
+
+
+def test_online_store_close_seals_ragged_tail_idempotently():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=16)
+    st.append(_rows(0, 6))
+    assert st.num_examples == 4
+    assert st.close() == 6                      # tail becomes the last shard
+    assert st.close() == 6                      # idempotent
+    np.testing.assert_array_equal(st.load(1), _rows(4, 2))
+    with pytest.raises(RuntimeError):
+        st.append(_rows(6, 1))                  # frozen
+
+
+def test_online_store_rejects_overflow_and_bad_shapes():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=8)
+    st.append(_rows(0, 6))
+    with pytest.raises(ValueError):
+        st.append(_rows(6, 3))                  # 6 + 3 > capacity 8
+    with pytest.raises(ValueError):
+        st.append(np.zeros((2, 5), np.int32))   # wrong item_shape
+    st.append(_rows(6, 1)[0])                   # single example is fine
+    assert st.total_logged == 7
+
+
+def test_online_store_concurrent_reads_during_appends():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=256)
+    errs = []
+
+    def reader():
+        for _ in range(500):
+            n = st.num_examples
+            if n:
+                try:
+                    st.load(n // st.shard_size - 1)
+                except Exception as e:          # pragma: no cover
+                    errs.append(e)
+    t = threading.Thread(target=reader)
+    t.start()
+    for i in range(256):
+        st.append(_rows(i, 1))
+    t.join()
+    assert not errs
+    np.testing.assert_array_equal(st.prefix(256), _rows(0, 256))
+
+
+# --------------------------------------------------- plane + ownership sizing
+def test_streaming_plane_preallocates_at_capacity_no_reupload():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=32)
+    st.append(_rows(0, 8))
+    with StreamingDataset([st], masked=True) as ds:
+        assert ds.windows[0].capacity == 32     # runtime-discovered capacity
+        ds.window(8)
+        st.append(_rows(8, 8))                  # traffic keeps landing
+        ds.window(16)
+        m = ds.meter.snapshot()
+        # append-only end to end: grown residency uploads only the new rows
+        assert m["examples_uploaded"] == 16
+        assert m["examples_loaded"] == 16
+
+
+def test_ownership_prefix_invariant_extends_to_capacity():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=32)
+    st.append(_rows(0, 8))
+    own = ShardOwnership.for_store(st, num_hosts=2)
+    assert own.num_examples == 32               # capacity, not sealed count
+    assert own.num_shards == 8
+
+
+# ------------------------------------------------------------- TrafficDriven
+def test_traffic_driven_holds_stage_until_arrivals_then_expands():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=32)
+    st.append(_rows(0, 8))
+    pumped = []
+
+    def pump():
+        pumped.append(1)
+        st.append(_rows(8 + 4 * (len(pumped) - 1), 4))
+    pol = TrafficDriven(inner_steps=1).attach(st, pump)
+    info = StageInfo(stage=0, n_t=8, n_prev=8, is_final=False, N=8, n_next=16)
+    pol.stage_begin(info)
+    assert pol.plan_steps(info, 0) == 1
+    assert not pol.should_expand(info, StageRecords())  # 12 < 16 after pump
+    assert pol.should_expand(info, StageRecords())      # 16 sealed now
+    assert pol.holds_total == 2 and len(pumped) == 2
+
+
+def test_traffic_driven_closed_source_and_hold_bound():
+    st = OnlineShardStore((3,), np.int32, shard_size=4, capacity=32)
+    st.append(_rows(0, 8))
+    pol = TrafficDriven(max_hold_chunks=3).attach(st)   # no pump wired
+    info = StageInfo(stage=0, n_t=8, n_prev=8, is_final=False, N=8, n_next=16)
+    pol.stage_begin(info)
+    assert not pol.should_expand(info, StageRecords())
+    assert not pol.should_expand(info, StageRecords())
+    with pytest.raises(RuntimeError, match="close the source or wire"):
+        pol.should_expand(info, StageRecords())
+    st.close()
+    assert pol.should_expand(info, StageRecords())      # closed == arrived
+    # final stages and offline (no-source) policies always expand
+    assert TrafficDriven().should_expand(
+        StageInfo(0, 8, 8, True, 8, None), StageRecords())
+    assert TrafficDriven().should_expand(info, StageRecords())
+
+
+# ---------------------------------------------------------------- run_online
+def test_run_online_rejects_unusable_configurations():
+    class _DS:
+        n = 0
+    eng = BetEngine(schedule=BETSchedule(n0=4))
+    with pytest.raises(ValueError, match="eval_data"):
+        eng.run_online(_DS(), None, None, FixedSteps(1, 1))
+    with pytest.raises(ValueError, match="two_track"):
+        eng.run_online(_DS(), None, None, TwoTrack(final_steps=2),
+                       eval_data=jnp.zeros((2, 3)))
+    with pytest.raises(ValueError, match="sealed example"):
+        eng.run_online(_DS(), None, None, FixedSteps(1, 1),
+                       eval_data=jnp.zeros((2, 3)))
+
+
+# -------------------------------------------------------------- hot swapping
+@pytest.fixture(scope="module")
+def serve_cfg():
+    return configs.reduced(configs.get("qwen3_0p6b"))
+
+
+@pytest.fixture(scope="module")
+def serve_params(serve_cfg):
+    return (T.init_params(serve_cfg, jax.random.key(0)),
+            T.init_params(serve_cfg, jax.random.key(1)))
+
+
+def _prompts(cfg, b=2, s=8):
+    return jax.random.randint(jax.random.key(7), (b, s), 0,
+                              min(cfg.vocab_size, 256), dtype=jnp.int32)
+
+
+def test_inflight_batch_finishes_under_pinned_weights(serve_cfg, serve_params):
+    """A swap mid-generation must not change the in-flight batch's output:
+    its KV cache was built under the old weights, so it finishes on them."""
+    old, new = serve_params
+    prompts = _prompts(serve_cfg)
+    ref = BetServer(serve_cfg, old, cache_len=16).generate(
+        prompts, gen_tokens=4)
+    srv = BetServer(serve_cfg, old, cache_len=16)
+    batch = srv.start(prompts)
+    batch.step()
+    batch.step()
+    assert srv.adopt(0, new)                    # hot swap mid-generation
+    batch.step()
+    batch.step()
+    assert jnp.array_equal(batch.finish(), ref)
+    # ...while the *next* batch serves the adopted weights
+    ref_new = BetServer(serve_cfg, new, cache_len=16).generate(
+        prompts, gen_tokens=4)
+    fresh = srv.start(prompts)
+    assert fresh.stage == 0
+    for _ in range(4):
+        fresh.step()
+    assert jnp.array_equal(fresh.finish(), ref_new)
+    assert srv.requests_completed == srv.requests_started
+
+
+def test_adopt_rejects_stale_stages(serve_cfg, serve_params):
+    old, new = serve_params
+    srv = BetServer(serve_cfg, old, cache_len=16, stage=2)
+    assert not srv.adopt(2, new)                # not fresher
+    assert not srv.adopt(1, new)
+    assert srv.adopt(3, new) and srv.adopted_stage == 3
+    assert srv.swap_count == 1
+
+
+# ------------------------------------------------- atomic checkpoint publish
+def _stage_end(params, stage=0, spec=None):
+    return StageEnd(
+        info=StageInfo(stage=stage, n_t=4, n_prev=4, is_final=True, N=4,
+                       n_next=None),
+        params=params, opt_state={"m": jnp.zeros(3)},
+        clock=SimulatedClock(), dataset=object(), trace=Trace("t"),
+        step_count=3, stages=1, transfers=1)
+
+
+def test_checkpointer_publishes_atomically(tmp_path):
+    params = {"w": jnp.arange(3.0)}
+    ck = StageCheckpointer(str(tmp_path), spec={"name": "x"})
+    ck.save(_stage_end(params))
+    # no temp debris, and nothing tmp-shaped ever matches the reader's glob
+    assert not list(tmp_path.glob(".tmp_*"))
+    assert [p.name for p in sorted(tmp_path.glob("stage_*.npz"))] == \
+        ["stage_0000.npz"]
+    meta = peek_stage_meta(tmp_path / "stage_0000")
+    assert meta["spec"] == {"name": "x"}
+    assert meta["cursor"]["stage"] == 0
+    restored = load_stage_checkpoint(tmp_path / "stage_0000", params, None)
+    np.testing.assert_array_equal(restored.params["w"], params["w"])
+
+
+def test_watcher_adopts_published_stages_in_order(tmp_path, serve_cfg,
+                                                  serve_params):
+    old, new = serve_params
+    srv = BetServer(serve_cfg, old, cache_len=16)
+    watcher = CheckpointWatcher(str(tmp_path), old, srv)
+    assert watcher.published_stage() is None
+    assert not watcher.poll()                   # nothing published yet
+    ck = StageCheckpointer(str(tmp_path))
+    ck.save(_stage_end(new, stage=0))
+    assert watcher.staleness() == 1
+    assert watcher.poll() and srv.adopted_stage == 0
+    assert watcher.staleness() == 0
+    assert not watcher.poll()                   # already fresh
+    leaves = zip(jax.tree_util.tree_leaves(srv.params),
+                 jax.tree_util.tree_leaves(new))
+    assert all(bool(jnp.array_equal(a, b)) for a, b in leaves)
+
+
+# --------------------------------------------------------- specs + front door
+def _serve_spec(ckpt_dir, capacity=48, swap=True):
+    return RunSpec(
+        name="t_serve",
+        data=DataSpec(kind="lm", plane="plane", corpus_size=capacity,
+                      seq_len=32, eval_rows=16, shard_size=8, seed=0),
+        policy=PolicySpec("traffic_driven",
+                          params={"inner_steps": 1, "final_steps": 2}),
+        optimizer=OptimizerSpec("adamw_lm",
+                                params={"lr": 1e-3, "batch_size": 4}),
+        schedule=ScheduleSpec(n0=16, growth=2.0, step_cost="batch"),
+        checkpoint=CheckpointSpec(directory=str(ckpt_dir)),
+        serve=ServeSpec(enabled=True, requests_per_tick=8, prompt_len=16,
+                        capacity=capacity, swap=swap),
+        model=ModelSpec(arch="qwen3-0.6b", reduced=True),
+    )
+
+
+def test_build_refuses_serve_specs_and_points_to_build_loop(tmp_path):
+    with pytest.raises(SpecError, match="build_loop"):
+        build(_serve_spec(tmp_path))
+
+
+def test_build_loop_validates_serve_geometry(tmp_path):
+    spec = _serve_spec(tmp_path)
+    with pytest.raises(SpecError, match="enabled"):
+        build_loop(spec.replace(serve=ServeSpec(enabled=False)))
+    bad_len = spec.replace(serve=spec.serve.replace(gen_tokens=10))
+    with pytest.raises(SpecError, match="tile training rows"):
+        build_loop(bad_len)                     # 16 + 10 != 33
+    with pytest.raises(SpecError, match="below n0"):
+        build_loop(spec.replace(serve=spec.serve.replace(capacity=8)))
+    with pytest.raises(SpecError, match="directory"):
+        build_loop(spec.replace(checkpoint=CheckpointSpec()))
+
+
+def test_check_resume_spec_flags_critical_divergence(tmp_path):
+    spec = _serve_spec(tmp_path)
+    stored = spec.to_dict()
+    check_resume_spec(spec, stored)             # identical: fine
+    stored["data"]["seq_len"] = 64
+    with pytest.raises(SpecError, match="data"):
+        check_resume_spec(spec, stored)
+
+
+# ------------------------------------------------------------ the closed loop
+def test_closed_loop_trains_swaps_and_freezes_the_log(tmp_path):
+    loop = build_loop(_serve_spec(tmp_path))
+    rep = loop.run()
+    # the window expanded: n0=16 -> 32 -> 48 under growth 2.0
+    assert rep["stages"] >= 3
+    assert rep["logged_examples"] == 48 and loop.store.closed
+    # every request completed; the log is exactly the served traffic
+    assert rep["server"]["requests_completed"] == \
+        rep["server"]["requests_started"] == rep["ticks"] * 8
+    # append-only residency: each logged example uploaded exactly once
+    assert rep["data_plane"]["examples_uploaded"] == 48
+    assert rep["data_plane"]["examples_loaded"] == 48
+    # the server drained to the newest published checkpoint
+    assert rep["server"]["swap_count"] >= 1
+    assert rep["staleness"]["final"] == 0
+    assert rep["staleness"]["adopted_stage"] == rep["checkpoints"][-1]
+    # serve-run checkpoints do not resume through the offline front door:
+    # the corpus was the request log, which a rebuild cannot regenerate
+    with pytest.raises(SpecError, match="serve"):
+        resume_session(tmp_path)

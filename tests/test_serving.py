@@ -107,3 +107,35 @@ def test_generate_runs_and_is_deterministic():
     t2 = generate(cfg, params, prompts, gen_tokens=4)
     assert t1.shape == (2, 4)
     assert jnp.array_equal(t1, t2)
+
+
+def test_generate_sampled_path_threads_the_key():
+    """Sampling is keyed, not stateful: the same key reproduces the exact
+    token sequence, a different key diverges (at reduced scale logits are
+    near-uniform, so divergence within a few tokens is overwhelming)."""
+    cfg = configs.reduced(configs.get("qwen3_0p6b"))
+    params = T.init_params(cfg, jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(4), (2, 16), 0, 256,
+                                 dtype=jnp.int32)
+    s1 = generate(cfg, params, prompts, gen_tokens=8, greedy=False,
+                  key=jax.random.key(5))
+    s2 = generate(cfg, params, prompts, gen_tokens=8, greedy=False,
+                  key=jax.random.key(5))
+    s3 = generate(cfg, params, prompts, gen_tokens=8, greedy=False,
+                  key=jax.random.key(6))
+    assert jnp.array_equal(s1, s2)
+    assert not jnp.array_equal(s1, s3)
+
+
+def test_generate_sliding_window_cache_matches_full_cache():
+    """With prompt + generation inside the attention window, the ring
+    buffer never evicts live context, so a sliding-window config must
+    generate exactly what its full-cache twin does."""
+    base = configs.reduced(configs.get("internlm2_1p8b"))
+    windowed = base.with_(sliding_window=24)
+    prompts = jax.random.randint(jax.random.key(4), (2, 12), 0, 256,
+                                 dtype=jnp.int32)
+    params = T.init_params(base, jax.random.key(1))
+    full = generate(base, params, prompts, gen_tokens=8)
+    ring = generate(windowed, params, prompts, gen_tokens=8)
+    assert jnp.array_equal(full, ring)          # 12 + 8 <= window 24
