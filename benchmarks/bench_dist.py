@@ -175,11 +175,26 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as fh:
             fh.write(text + "\n")
-    if not all(report["claims"].values()):
-        # ordinary exception: benchmarks/run.py records FAILED and continues
-        raise RuntimeError(
-            f"bench_dist claims failed: "
-            f"{[k for k, v in report['claims'].items() if not v]}")
+    common.check_claims("bench_dist", report["claims"], {
+        "per_host_loads_are_owned_slice_only":
+            f"loaded={per_host_loaded} owned={owned}",
+        "per_host_share_within_one_shard_of_global_over_n":
+            f"loaded={per_host_loaded} ideal={ideal} "
+            f"(need within {args.shard_size})",
+        "each_example_loaded_once_globally":
+            f"examples_loaded={global_meter['examples_loaded']} "
+            f"(need == n={ds.n})",
+        "zero_resident_reupload_per_stage_per_host":
+            "reupload_bytes=" + str(
+                [[h["reupload_bytes"] for h in s["hosts"]]
+                 for s in stages]) + " (need all 0)",
+        "one_collective_flush_per_stage":
+            f"host_transfers={tr_dist.meta['host_transfers']} "
+            f"(need <= stages={tr_dist.meta['stages']})",
+        "trajectory_matches_single_host_within_fp_tolerance":
+            f"max_rel_dev={rel_dev} (need <= {REL_TOL}, "
+            f"same_shape={same_shape})",
+    })
 
 
 if __name__ == "__main__":

@@ -244,11 +244,43 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as fh:
             fh.write(text + "\n")
-    if not all(report["claims"].values()):
-        # ordinary exception: benchmarks/run.py records FAILED and continues
-        raise RuntimeError(
-            f"bench_elastic claims failed: "
-            f"{[k for k, v in report['claims'].items() if not v]}")
+    common.check_claims("bench_elastic", report["claims"], {
+        "resume_single_trajectory_within_tol":
+            f"max_rel_dev={resume_single['trajectory_max_rel_dev']} "
+            f"(need <= {REL_TOL})",
+        "resume_single_accounting_bit_identical":
+            f"clock_bit_identical={resume_single['clock_bit_identical']} "
+            f"accesses_bit_identical="
+            f"{resume_single['accesses_bit_identical']}",
+        "resume_dist_trajectory_within_tol":
+            f"max_rel_dev={resume_dist['trajectory_max_rel_dev']} "
+            f"(need <= {REL_TOL})",
+        "resume_dist_accounting_bit_identical":
+            f"clock_bit_identical={resume_dist['clock_bit_identical']} "
+            f"accesses_bit_identical={resume_dist['accesses_bit_identical']}",
+        "recovery_reread_at_most_owned_slice":
+            f"reread_bytes={host_loss['reread_bytes']} "
+            f"(need <= owned_bytes={host_loss['owned_bytes']})",
+        "recovery_reread_is_window_slice_exactly":
+            f"reread_examples={host_loss['reread_examples']} "
+            f"(need == window_at_loss={host_loss['window_at_loss']})",
+        "zero_survivor_reupload_on_recovery":
+            f"survivor_reupload_bytes="
+            f"{host_loss['survivor_reupload_bytes_all_stages']} (need 0)",
+        "host_loss_trajectory_within_tol":
+            f"max_rel_dev={host_loss['trajectory_max_rel_dev']} "
+            f"(need <= {REL_TOL})",
+        "straggler_migrated_shards":
+            f"shards_migrated={straggler['shards_migrated']} (need > 0)",
+        "straggler_each_example_loaded_once":
+            f"total_examples_loaded={straggler['total_examples_loaded']} "
+            f"(need == n={ds.n})",
+        "straggler_windows_still_partition":
+            f"windows_partition={straggler['windows_partition_every_stage']}",
+        "straggler_trajectory_within_tol":
+            f"max_rel_dev={straggler['trajectory_max_rel_dev']} "
+            f"(need <= {REL_TOL})",
+    })
 
 
 if __name__ == "__main__":

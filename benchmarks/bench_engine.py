@@ -122,11 +122,18 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as fh:
             fh.write(text + "\n")
-    if not all(report["claims"].values()):
-        # ordinary exception: benchmarks/run.py records FAILED and continues
-        raise RuntimeError(
-            f"bench_engine claims failed: "
-            f"{[k for k, v in report['claims'].items() if not v]}")
+    common.check_claims("bench_engine", report["claims"], {
+        "engine_max_one_transfer_per_stage":
+            "syncs_per_stage=" + str({k: v["engine"]["syncs_per_stage"]
+                                      for k, v in m.items()}) + " (need <= 1)",
+        "legacy_at_least_two_syncs_per_step":
+            "syncs_per_inner_step=" + str(
+                {k: v["legacy"]["syncs_per_inner_step"]
+                 for k, v in m.items() if k != "batch"}) + " (need >= 2)",
+        "engine_faster": "speedup=" + str(
+            {k: v["speedup"] for k, v in m.items()}) + " (need > 1)",
+        "parity": "parity=" + str({k: v["parity"] for k, v in m.items()}),
+    })
 
 
 if __name__ == "__main__":

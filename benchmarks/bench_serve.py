@@ -50,6 +50,8 @@ from repro.data.plane import StreamingDataset
 from repro.serve import build_loop
 from repro.serve.swap import serve_kernels
 
+from . import common
+
 
 def _spec(args, ckpt_dir: str, *, swap: bool) -> RunSpec:
     return RunSpec(
@@ -175,9 +177,23 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as fh:
             fh.write(out)
-    failed = [k for k, ok in claims.items() if not ok]
-    if failed:
-        raise RuntimeError(f"bench_serve claims failed: {failed}")
+    common.check_claims("bench_serve", claims, {
+        "throughput_under_swap": f"ratio={ratio:.4f} (need >= 0.8)",
+        "swap_latency_bounded":
+            f"swap_latency_max_s={swap_rep['server']['swap_latency_max_s']} "
+            f"(need < 5.0)",
+        "staleness_warm": f"max_warm={swap_rep['staleness']['max_warm']} "
+                          f"(need <= 1)",
+        "swapped_repeatedly":
+            f"swap_count={swap_rep['server']['swap_count']} (need >= 2)",
+        "no_dropped_requests": "completed != started: " + str(
+            {k: (r["server"]["requests_completed"],
+                 r["server"]["requests_started"]) for k, r in runs.items()}),
+        "single_upload":
+            f"examples_loaded={meter['examples_loaded']} "
+            f"uploaded={meter['examples_uploaded']} (need == n={n_final})",
+        "resume_bit_compatible": f"resume={resume}",
+    })
 
 
 if __name__ == "__main__":

@@ -135,6 +135,23 @@ def fmt(x: float) -> str:
     return "inf" if np.isinf(x) else f"{x:.0f}"
 
 
+def check_claims(module: str, claims: dict, details: dict | None = None) -> None:
+    """Assert a benchmark's claim dict.  Failures print one
+    ``CLAIM FAILED <module>/<name>: <observed vs threshold>`` line per
+    claim before the harness-visible RuntimeError, so a FAILED row in CI
+    carries the numbers, not just the claim names."""
+    failed = [k for k, v in claims.items() if not v]
+    if not failed:
+        return
+    details = details or {}
+    for k in failed:
+        print(f"CLAIM FAILED {module}/{k}: "
+              f"{details.get(k, 'observed falsy, no detail recorded')}",
+              flush=True)
+    # ordinary exception: benchmarks/run.py records FAILED and continues
+    raise RuntimeError(f"{module} claims failed: {failed}")
+
+
 def walled(fn):
     t0 = time.time()
     out = fn()

@@ -8,6 +8,11 @@ per-(arch × shape × mesh) three-term table (EXPERIMENTS.md §Roofline).
 All three come from the loop-aware HLO accounting (launch/hlo.py) of the
 compiled 512-device SPMD module — see DESIGN.md §7 for methodology and its
 deviations from raw ``cost_analysis()`` (which counts scan bodies once).
+
+The seed pallas kernels get their own rows (``roofline/kernel/<name>``)
+straight from ``repro.obs.profile.seed_kernel_costs`` — per-kernel FLOPs,
+bytes and the roofline bound at bench-representative shapes, so the kernel
+table no longer depends on pre-generated dry-run artifacts.
 """
 from __future__ import annotations
 
@@ -45,7 +50,28 @@ def table(rows: list[dict]) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+def kernel_rows() -> dict:
+    """Seed-kernel FLOP/byte/roofline rows from the live HLO estimator."""
+    try:
+        from repro.obs.profile import seed_kernel_costs
+        costs = seed_kernel_costs()
+    except Exception as exc:
+        emit("roofline/kernels", 0.0,
+             f"unavailable: {type(exc).__name__}: {exc}")
+        return {}
+    for name, c in sorted(costs.items()):
+        if "error" in c:
+            emit(f"roofline/kernel/{name}", 0.0, f"error={c['error']}")
+            continue
+        emit(f"roofline/kernel/{name}", c["roofline_us"],
+             f"flops={c['flops']:.0f};bytes={c['bytes']:.0f};"
+             f"bottleneck={c['bottleneck']};"
+             f"intensity={c['intensity_flops_per_byte']:.2f}")
+    return costs
+
+
 def main() -> None:
+    kernel_rows()
     rows = load_all()
     if not rows:
         emit("roofline/none", 0.0, "no artifacts; run repro.launch.dryrun")

@@ -5,8 +5,8 @@
 # dicts/JSON, so a run is a reproducible artifact (saved into checkpoints,
 # printed by --dry-run).
 from .specs import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
-                    OptimizerSpec, PolicySpec, RunSpec, ScheduleSpec,
-                    ServeSpec, SpecError, TopologySpec)
+                    ObsSpec, OptimizerSpec, PolicySpec, RunSpec,
+                    ScheduleSpec, ServeSpec, SpecError, TopologySpec)
 from .registry import (OPTIMIZERS, POLICIES, STORES, TOPOLOGIES,
                        build_optimizer, build_policy, make_store,
                        optimizer_spec_of, register_optimizer,
@@ -18,7 +18,8 @@ from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
 __all__ = [
     "RunSpec", "DataSpec", "PolicySpec", "OptimizerSpec", "ScheduleSpec",
     "TopologySpec", "ElasticSpec", "CheckpointSpec", "ServeSpec",
-    "ModelSpec", "SpecError", "Session", "build", "convex_problem",
+    "ObsSpec", "ModelSpec", "SpecError", "Session", "build",
+    "convex_problem",
     "resume_session", "check_resume_spec",
     "POLICIES", "OPTIMIZERS", "STORES", "TOPOLOGIES",
     "build_policy", "build_optimizer", "optimizer_spec_of", "make_store",

@@ -18,6 +18,7 @@ into every stage checkpoint and printed by the CLI's ``--dry-run``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import pathlib
@@ -474,6 +475,59 @@ class Session:
         self.stage_ends: list[dict] = []
         self._callbacks: list[Callable] = []
         engine.stage_callback = self._stage_end
+        self.recorder = None            # EventRecorder when obs is enabled
+        if spec.obs.enabled:
+            self._wire_obs()
+
+    # -------------------------------------------------------- observability
+    def _wire_obs(self) -> None:
+        """One recorder through the whole stack: engine stage spans, data
+        plane meters/prefetchers, the simulated clock and the checkpointer
+        all emit into the same totally-ordered stream."""
+        from ..obs import EventRecorder
+        from ..obs.metrics import attach_clock, attach_dataset
+        rec = EventRecorder()
+        self.recorder = rec
+        self.engine.recorder = rec
+        attach_dataset(self.dataset, rec)
+        attach_clock(self.clock, rec)
+        if self.checkpointer is not None:
+            self.checkpointer.recorder = rec
+        if self.spec.obs.profile:
+            from ..obs.profile import StageProfiler
+            self.engine.profiler = StageProfiler(rec)
+
+    def run_report(self):
+        """The :class:`~repro.obs.report.RunReport` over this session's
+        event stream (needs ``RunSpec.obs.enabled``)."""
+        if self.recorder is None:
+            raise SpecError("run_report needs observability: set "
+                            "RunSpec.obs.enabled=True before build()")
+        from ..obs import RunReport
+        return RunReport.from_recorder(self.recorder)
+
+    def _emit_run_meta(self) -> None:
+        stores = getattr(self.dataset, "stores", None) or ()
+        row_bytes = sum(int(getattr(s, "example_nbytes", 0)) for s in stores)
+        self.recorder.instant("run.meta", fields={
+            "name": self.spec.name, "n": int(self.dataset.n),
+            "hosts": self.spec.topology.hosts,
+            "policy": self.spec.policy.name,
+            "n0": self.spec.schedule.n0, "growth": self.spec.schedule.growth,
+            "row_bytes": row_bytes})
+
+    def _write_obs(self) -> dict:
+        obs = self.spec.obs
+        d = pathlib.Path(obs.dir)
+        d.mkdir(parents=True, exist_ok=True)
+        out = {"events": str(d / "events.jsonl")}
+        self.recorder.to_jsonl(out["events"])
+        if obs.chrome_trace:
+            out["trace"] = str(d / "trace.json")
+            self.recorder.to_chrome_trace(out["trace"])
+        if obs.report:
+            out.update(self.run_report().save(d))
+        return out
 
     # ------------------------------------------------------------- boundaries
     def on_stage(self, callback: Callable[[StageEnd], None]) -> None:
@@ -548,12 +602,19 @@ class Session:
         meta = dict(spec.meta)
         if self.model_config is not None:
             meta.setdefault("arch", self.model_config.name)
+        prof = contextlib.nullcontext()
+        if self.recorder is not None:
+            self._emit_run_meta()
+            if spec.obs.jax_profiler_dir:
+                from ..obs.profile import profiler_trace
+                prof = profiler_trace(spec.obs.jax_profiler_dir)
         try:
-            trace = self.engine.run(
-                self.dataset, self.optimizer, self.objective, self.policy,
-                clock=self.clock, eval_data=self.eval_data,
-                trace_name=trace_name, meta=meta or None,
-                progress=progress, probe=probe, **run_kw)
+            with prof:
+                trace = self.engine.run(
+                    self.dataset, self.optimizer, self.objective, self.policy,
+                    clock=self.clock, eval_data=self.eval_data,
+                    trace_name=trace_name, meta=meta or None,
+                    progress=progress, probe=probe, **run_kw)
         finally:
             self.close()
         meter = getattr(self.dataset, "meter", None)
@@ -563,6 +624,8 @@ class Session:
             trace.meta["data_plane_hosts"] = {
                 h: self.dataset.host_meters[h].snapshot()
                 for h in self.dataset.planes}
+        if self.recorder is not None and spec.obs.dir:
+            trace.meta["obs_files"] = self._write_obs()
         self.trace = trace
         return trace
 

@@ -248,6 +248,26 @@ class ServeSpec(_Spec):
     seed: int = 0
 
 
+# ------------------------------------------------------------ observability
+@dataclasses.dataclass(frozen=True)
+class ObsSpec(_Spec):
+    """The telemetry plane (``repro.obs``): structured stage spans/events,
+    meter-wrapping metrics, the end-of-run :class:`~repro.obs.RunReport`,
+    and opt-in profiling.  Off by default — with ``enabled=False`` the
+    stack emits nothing and trajectories are bit-identical to an
+    uninstrumented run.  ``dir`` lands ``events.jsonl`` (+ ``trace.json``
+    when ``chrome_trace``, + ``report.json``/``report.txt`` when
+    ``report``) after the run; ``profile`` wires the per-stage HLO cost
+    estimator, and ``jax_profiler_dir`` additionally captures a
+    ``jax.profiler`` trace."""
+    enabled: bool = False
+    dir: str | None = None          # event log / trace / report directory
+    chrome_trace: bool = False      # also export trace.json (Perfetto)
+    report: bool = True             # write RunReport when dir is set
+    profile: bool = False           # per-stage HLO FLOP/byte estimates
+    jax_profiler_dir: str | None = None
+
+
 # -------------------------------------------------------------------- model
 @dataclasses.dataclass(frozen=True)
 class ModelSpec(_Spec):
@@ -279,6 +299,7 @@ class RunSpec(_Spec):
     checkpoint: CheckpointSpec = dataclasses.field(
         default_factory=CheckpointSpec)
     serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     model: ModelSpec | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
@@ -291,6 +312,7 @@ class RunSpec(_Spec):
         _coerce(self, "elastic", ElasticSpec)
         _coerce(self, "checkpoint", CheckpointSpec)
         _coerce(self, "serve", ServeSpec)
+        _coerce(self, "obs", ObsSpec)
         if isinstance(self.model, dict):
             _set(self, model=ModelSpec.from_dict(self.model))
         _set(self, meta=dict(self.meta))

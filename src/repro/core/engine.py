@@ -37,6 +37,7 @@ parity tests and benchmarks/bench_engine.py.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import Any, Callable
@@ -502,6 +503,14 @@ def _two_track_kernel(optimizer, objective, *, condition_eval: bool,
     return jitted
 
 
+def _obs_span(recorder, name: str, **fields):
+    """A recorder span when observability is wired, a no-op otherwise —
+    every engine hook is one ``None`` check when ``ObsSpec`` is off."""
+    if recorder is None:
+        return contextlib.nullcontext({})
+    return recorder.span(name, **fields)
+
+
 # ---------------------------------------------------------------- the engine
 @dataclasses.dataclass
 class BetEngine:
@@ -524,6 +533,12 @@ class BetEngine:
     # plugs in here without subclassing; fault injection subclasses
     # _stage_boundary instead (elastic/runtime.py)
     stage_callback: Callable | None = None
+    # observability (repro.obs): a wired EventRecorder makes the engine emit
+    # structured stage spans/instants/counters; a StageProfiler additionally
+    # lowers each stage's kernel once for analytic FLOP/byte costs.  Both
+    # off by default — the stage trajectory is bit-identical either way.
+    recorder: Any | None = None
+    profiler: Any | None = None
 
     def run(self, dataset, optimizer: BatchOptimizer, objective: Objective,
             policy: ExpansionPolicy, *, w0=None, clock: SimulatedClock | None = None,
@@ -699,9 +714,15 @@ class BetEngine:
                         info: StageInfo, w, state, full_data, *,
                         eval_full=None, extra_base=None):
         clock, cost = ctx["clock"], ctx["cost"]
+        obs = self.recorder
         eval_full = policy.eval_full if eval_full is None else eval_full
         collect_params = ctx["probe"] is not None
-        win = self._acquire_window(dataset, info.n_t, info.n_next)
+        if obs is not None:
+            obs.set_context(stage=info.stage)
+            obs.instant("stage.begin", window=info.n_t, n_next=info.n_next,
+                        final=info.is_final)
+        with _obs_span(obs, "stage.acquire", window=info.n_t):
+            win = self._acquire_window(dataset, info.n_t, info.n_next)
         if self.wait_on_expand:
             clock.wait_for(info.n_t)
         kernel = _scan_kernel(optimizer, objective, eval_full=eval_full,
@@ -712,24 +733,41 @@ class BetEngine:
         rec = StageRecords()
         while True:
             k = int(policy.plan_steps(info, rec.steps))
-            out = kernel(w, state, win, full_data, num_steps=k,
-                         probe_k=probe_k)
-            w, state = out["params"], out["state"]
-            pulled = jax.device_get(
-                {n: v for n, v in out.items() if n not in ("params", "state")})
+            if self.profiler is not None and rec.steps == 0:
+                self.profiler.observe(info, kernel, (w, state, win, full_data),
+                                      {"num_steps": k, "probe_k": probe_k})
+            with _obs_span(obs, "stage.compute", steps=k, window=info.n_t):
+                out = kernel(w, state, win, full_data, num_steps=k,
+                             probe_k=probe_k)
+                w, state = out["params"], out["state"]
+                pulled = jax.device_get(
+                    {n: v for n, v in out.items()
+                     if n not in ("params", "state")})
             ctx["transfers"] += 1
+            if obs is not None:
+                obs.instant("engine.transfer", transfers=ctx["transfers"])
             rec.add_chunk(pulled["f"], pulled.get("f_full"), pulled.get("w"))
             if policy.wants_variance:
                 rec.var, rec.g2 = float(pulled["var"]), float(pulled["g2"])
-            if policy.should_expand(info, rec):
+            expand = policy.should_expand(info, rec)
+            if obs is not None:
+                obs.instant("expand.decision", expand=bool(expand),
+                            window=info.n_t, steps=rec.steps,
+                            var=rec.var, g2=rec.g2,
+                            triggered=bool(rec.triggered))
+            if expand:
                 break
             if rec.steps > self.max_engine_steps:
                 raise RuntimeError(
                     f"policy {policy.name} never expanded after {rec.steps} steps")
-        self._flush_stage(ctx, policy, info, rec, extra_base=extra_base,
-                          eval_charge=probe_k)
+        with _obs_span(obs, "stage.flush", window=info.n_t):
+            self._flush_stage(ctx, policy, info, rec, extra_base=extra_base,
+                              eval_charge=probe_k)
         policy.stage_end(info, rec)
         self._stage_boundary(ctx, info, w, state)
+        if obs is not None:
+            obs.instant("stage.end", window=info.n_t)
+            obs.clear_context("stage")
         return w, state
 
     def _stage_boundary(self, ctx, info: StageInfo, w, state) -> None:
@@ -791,9 +829,23 @@ class BetEngine:
             f_window=fs[idx], f_full=ffull[idx], extra=extras)
         ctx["step_count"] += n
         ctx["stages"] += 1
+        self._emit_stage_totals(ctx, info, steps=n, touched=touched)
         if ctx["progress"]:
             for p in new:
                 ctx["progress"](p)
+
+    def _emit_stage_totals(self, ctx, info: StageInfo, *, steps: int,
+                           touched: int) -> None:
+        """One ``stage.totals`` counter per stage: the cumulative clock and
+        engine state the RunReport differences into per-stage rows."""
+        if self.recorder is None:
+            return
+        clock = ctx["clock"]
+        self.recorder.counter(
+            "stage.totals", tags={"stage": info.stage}, window=info.n_t,
+            steps=steps, touched=touched, time=clock.time,
+            accesses=clock.data_accesses, loaded=clock.points_loaded,
+            transfers=ctx["transfers"], stages=ctx["stages"])
 
     @staticmethod
     def _note_access(ctx, examples: int) -> None:
@@ -814,13 +866,19 @@ class BetEngine:
                                    collect_params=collect_params)
         N = dataset.n
         *racing, final_info = self.stage_infos(policy, N)
+        obs = self.recorder
         for info in racing:
             stage = info.stage
             if stage < first_stage:
                 continue                # completed before the checkpoint
             n_prev, n_t, n_next = info.n_prev, info.n_t, info.n_next
-            win_t = self._acquire_window(dataset, n_t, n_next)
-            win_prev = dataset.window(n_prev)   # resident prefix: no loads
+            if obs is not None:
+                obs.set_context(stage=stage)
+                obs.instant("stage.begin", window=n_t, n_next=n_next,
+                            final=info.is_final)
+            with _obs_span(obs, "stage.acquire", window=n_t):
+                win_t = self._acquire_window(dataset, n_t, n_next)
+                win_prev = dataset.window(n_prev)  # resident prefix: no loads
             if self.wait_on_expand:
                 clock.wait_for(n_t)
             st_slow = optimizer.reset_memory(
@@ -836,13 +894,23 @@ class BetEngine:
             # ComposedPolicy veto can hold the stage open, re-racing from
             # the current point with a fresh fast track
             while True:
-                out = kernel(w, st_slow, st_fast, win_t, win_prev, full_data,
-                             max_iters=int(policy.max_stage_iters))
-                w, state = out["params"], out["state"]
-                pulled = jax.device_get(
-                    {n: v for n, v in out.items()
-                     if n not in ("params", "state")})
+                if self.profiler is not None and rec.steps == 0:
+                    self.profiler.observe(
+                        info, kernel,
+                        (w, st_slow, st_fast, win_t, win_prev, full_data),
+                        {"max_iters": int(policy.max_stage_iters)})
+                with _obs_span(obs, "stage.compute", window=n_t):
+                    out = kernel(w, st_slow, st_fast, win_t, win_prev,
+                                 full_data,
+                                 max_iters=int(policy.max_stage_iters))
+                    w, state = out["params"], out["state"]
+                    pulled = jax.device_get(
+                        {n: v for n, v in out.items()
+                         if n not in ("params", "state")})
                 ctx["transfers"] += 1
+                if obs is not None:
+                    obs.instant("engine.transfer",
+                                transfers=ctx["transfers"])
                 s = int(pulled["s"])
                 rec.add_chunk(pulled["f_slow"][:s], pulled["f_full"][:s],
                               jax.tree_util.tree_map(lambda b: b[:s],
@@ -855,8 +923,16 @@ class BetEngine:
                     v, g2 = jax.device_get(cached_variance(objective)(
                         w, win_t, probe_k))
                     ctx["transfers"] += 1
+                    if obs is not None:
+                        obs.instant("engine.transfer",
+                                    transfers=ctx["transfers"])
                     rec.var, rec.g2 = float(v), float(g2)
-                if policy.should_expand(info, rec):
+                expand = policy.should_expand(info, rec)
+                if obs is not None:
+                    obs.instant("expand.decision", expand=bool(expand),
+                                window=n_t, steps=rec.steps, var=rec.var,
+                                g2=rec.g2, triggered=rec.triggered)
+                if expand:
                     break
                 if rec.steps > self.max_engine_steps:
                     raise RuntimeError(
@@ -865,44 +941,52 @@ class BetEngine:
                 st_slow = state
                 st_fast = optimizer.init(w)
             s = rec.steps
-            self._collect_host_records(ctx, info)
-            # replay the per-step clock charges: slow update, fast update,
-            # condition evaluation (charged per the paper unless disabled),
-            # plus one variance-probe eval at each race-round boundary
-            times = np.empty(s)
-            accs = np.empty(s, dtype=np.int64)
-            touched = 0
-            i = 0
-            for clen in rec.chunk_lengths():
-                for j in range(clen):
-                    clock.batch_update(cost(n_t))
-                    clock.batch_update(cost(n_prev))
-                    touched += cost(n_t) + cost(n_prev)
-                    if policy.charge_condition_eval:
-                        clock.eval_pass(cost(n_t))
-                        touched += cost(n_t)
-                    if probe_k and j == clen - 1:
-                        clock.eval_pass(probe_k)
-                        touched += probe_k
-                    times[i], accs[i] = clock.time, clock.data_accesses
-                    i += 1
-            self._note_access(ctx, touched)
-            extras = [{"f_fast_on_t": float(rec.f_fast_on_t[i])}
-                      for i in range(s)]
-            if ctx["probe"] is not None:
-                for i in range(s):
-                    extras[i]["probe"] = float(ctx["probe"](rec.param_at(i)))
-            new = trace.extend(
-                step=np.arange(ctx["step_count"], ctx["step_count"] + s),
-                stage=stage, window=n_t, time=times, accesses=accs,
-                f_window=rec.f_window(), f_full=rec.f_full(), extra=extras)
-            ctx["step_count"] += s
-            ctx["stages"] += 1
+            with _obs_span(obs, "stage.flush", window=n_t):
+                self._collect_host_records(ctx, info)
+                # replay the per-step clock charges: slow update, fast
+                # update, condition evaluation (charged per the paper unless
+                # disabled), plus one variance-probe eval at each race-round
+                # boundary
+                times = np.empty(s)
+                accs = np.empty(s, dtype=np.int64)
+                touched = 0
+                i = 0
+                for clen in rec.chunk_lengths():
+                    for j in range(clen):
+                        clock.batch_update(cost(n_t))
+                        clock.batch_update(cost(n_prev))
+                        touched += cost(n_t) + cost(n_prev)
+                        if policy.charge_condition_eval:
+                            clock.eval_pass(cost(n_t))
+                            touched += cost(n_t)
+                        if probe_k and j == clen - 1:
+                            clock.eval_pass(probe_k)
+                            touched += probe_k
+                        times[i], accs[i] = clock.time, clock.data_accesses
+                        i += 1
+                self._note_access(ctx, touched)
+                extras = [{"f_fast_on_t": float(rec.f_fast_on_t[i])}
+                          for i in range(s)]
+                if ctx["probe"] is not None:
+                    for i in range(s):
+                        extras[i]["probe"] = float(
+                            ctx["probe"](rec.param_at(i)))
+                new = trace.extend(
+                    step=np.arange(ctx["step_count"], ctx["step_count"] + s),
+                    stage=stage, window=n_t, time=times, accesses=accs,
+                    f_window=rec.f_window(), f_full=rec.f_full(),
+                    extra=extras)
+                ctx["step_count"] += s
+                ctx["stages"] += 1
+                self._emit_stage_totals(ctx, info, steps=s, touched=touched)
             if ctx["progress"]:
                 for p in new:
                     ctx["progress"](p)
             policy.stage_end(info, rec)
             self._stage_boundary(ctx, info, w, state)
+            if obs is not None:
+                obs.instant("stage.end", window=n_t)
+                obs.clear_context("stage")
 
         # final phase: full window until the step budget is spent
         if first_stage > final_info.stage:

@@ -75,19 +75,34 @@ class Prefetcher:
         self._pending: dict[int, Future] = {}
         self._lock = threading.Lock()
         self._closed = False
+        # observability (repro.obs.metrics.attach_prefetcher): when wired,
+        # schedule/load/land/cancel each emit one event; ``prefetch.loaded``
+        # fires on the worker thread, interleaved with the driving thread's
+        # events in recorder ``seq`` order
+        self.recorder = None
+        self.recorder_tags: dict = {}
+
+    def _obs(self, name: str, **fields) -> None:
+        rec = self.recorder
+        if rec is not None:
+            rec.instant(name, tags=self.recorder_tags or None, **fields)
 
     # ------------------------------------------------------------------ api
     def schedule(self, shard_ids) -> None:
         """Begin loading shards in the background (idempotent per shard).
         No-op after ``close``; raises ``ShardLoadError`` eagerly if any
         previously scheduled load has already failed."""
+        new_ids = []
         with self._lock:
             if self._closed:
                 return
             self._sweep_failures_locked()
             for i in shard_ids:
                 if i not in self._pending:
+                    new_ids.append(i)
                     self._pending[i] = self._pool.submit(self._timed_load, i)
+        for i in new_ids:        # emit outside the lock
+            self._obs("prefetch.scheduled", shard=int(i))
 
     def cancel(self, shard_ids) -> list[int]:
         """Drop scheduled loads whose shards no longer belong here (elastic
@@ -106,6 +121,8 @@ class Prefetcher:
                 if fut is not None:
                     fut.cancel()
                     dropped.append(i)
+        for i in dropped:
+            self._obs("prefetch.cancelled", shard=int(i))
         return dropped
 
     def scheduled(self) -> list[int]:
@@ -147,6 +164,9 @@ class Prefetcher:
                 nbytes=sum(a.nbytes for a in arrays),
                 examples=self.stores[0].examples_in(shard),
                 duration_s=duration, blocked_s=blocked, prefetched=prefetched)
+        self._obs("prefetch.landed", shard=int(shard),
+                  prefetched=prefetched, blocked_s=blocked,
+                  duration_s=duration)
         return arrays
 
     def close(self) -> None:
@@ -186,4 +206,8 @@ class Prefetcher:
     def _timed_load(self, shard: int):
         t0 = time.perf_counter()
         arrays = tuple(s.load(shard) for s in self.stores)
-        return arrays, time.perf_counter() - t0
+        duration = time.perf_counter() - t0
+        # worker-thread emission: the event-ordering tests pin that this
+        # lands after the shard's prefetch.scheduled and before its landed
+        self._obs("prefetch.loaded", shard=int(shard), duration_s=duration)
+        return arrays, duration

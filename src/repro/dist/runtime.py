@@ -98,10 +98,17 @@ class DistributedDataset:
         """One streaming plane for lane ``lane`` over its owned shards —
         also the lane *rebuild* path: a fresh plane over a reset lane
         re-reads exactly the lane's owned slice."""
-        return StreamingDataset(
+        plane = StreamingDataset(
             self._lane_stores(lane), meter=self.host_meters[lane],
             growth=self.growth, prefetch_workers=self.prefetch_workers,
             windows=[sw.lane(lane) for sw in self.stacked])
+        # re-wire observability onto rebuilt planes: the meter object
+        # survives a lane rebuild (stays wrapped), the Prefetcher does not
+        rec = getattr(self, "_obs_recorder", None)
+        if rec is not None:
+            plane.prefetcher.recorder = rec
+            plane.prefetcher.recorder_tags = {"host": int(lane)}
+        return plane
 
     # ---------------------------------------------------------------- protocol
     @property
@@ -231,3 +238,6 @@ class DistributedBetEngine(BetEngine):
         gathered = self.comm.all_gather_records(records(info.n_t))
         ctx["trace"].meta.setdefault("host_stage_records", []).append(
             {"stage": info.stage, "n_t": info.n_t, "hosts": gathered})
+        if self.recorder is not None:
+            self.recorder.instant("stage.host_records", stage=info.stage,
+                                  n_t=info.n_t, hosts=gathered)

@@ -16,6 +16,7 @@ the exact carries the next stage starts from.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -145,6 +146,9 @@ class StageCheckpointer:
     keep: int = 3
     every: int = 1
     spec: dict | None = None
+    # observability: when an EventRecorder is wired, every publish emits one
+    # ``checkpoint.publish`` span covering the atomic write
+    recorder: object = None
 
     def __post_init__(self):
         if self.keep < 1:
@@ -159,6 +163,13 @@ class StageCheckpointer:
         self.save(end)
 
     def save(self, end: StageEnd) -> pathlib.Path:
+        span = self.recorder.span(
+            "checkpoint.publish", stage=end.info.stage, n_t=end.info.n_t) \
+            if self.recorder is not None else contextlib.nullcontext()
+        with span:
+            return self._save(end)
+
+    def _save(self, end: StageEnd) -> pathlib.Path:
         d = pathlib.Path(self.directory)
         path = d / f"stage_{end.info.stage:04d}"
         # publish atomically: write under a dot-prefixed temp name (invisible

@@ -377,6 +377,11 @@ class ElasticBetEngine(DistributedBetEngine):
         if events:
             ctx["trace"].meta.setdefault("elastic_events", []).append(
                 {"stage": info.stage, "n_t": info.n_t, "events": events})
+            if self.recorder is not None:
+                for ev in events:
+                    self.recorder.instant(
+                        f"elastic.{ev.get('kind', 'event')}",
+                        tags={"stage": info.stage}, n_t=info.n_t, **ev)
 
     def run(self, dataset, optimizer, objective, policy, **kw):
         trace = super().run(dataset, optimizer, objective, policy, **kw)

@@ -1,0 +1,22 @@
+"""repro.obs — one telemetry plane for the BET stack.
+
+``events``  structured span/instant/counter recorder, JSONL + Chrome trace
+``metrics`` registry + adapters wrapping DataAccessMeter/SimulatedClock/
+            BetServer so BENCH claims are re-derivable from the stream
+``report``  end-of-run RunReport: per-stage table, Thm 4.1 accounting,
+            expansion decisions, claim recomputation
+``profile`` opt-in jax.profiler capture + per-stage HLO FLOP/byte estimates
+            (import ``repro.obs.profile`` directly — it needs jax; the rest
+            of the package stays stdlib+numpy importable)
+"""
+from .events import (Event, EventRecorder, chrome_trace, from_jsonl,
+                     validate_events)
+from .metrics import (MetricsRegistry, attach_clock, attach_dataset,
+                      attach_meter, attach_prefetcher, attach_server)
+from .report import RunReport
+
+__all__ = [
+    "Event", "EventRecorder", "chrome_trace", "from_jsonl",
+    "validate_events", "MetricsRegistry", "attach_clock", "attach_dataset",
+    "attach_meter", "attach_prefetcher", "attach_server", "RunReport",
+]

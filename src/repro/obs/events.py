@@ -1,0 +1,288 @@
+"""Structured spans and events — the one telemetry stream for the BET stack.
+
+BET's claims are *accounting* claims (Thm 4.1's O(1/ε) data accesses, §3.3's
+load/compute overlap, ≤ 1 host transfer per stage), yet the instrumentation
+backing them has historically lived on five ad-hoc surfaces: trace points,
+``SimulatedClock`` charges, ``DataAccessMeter`` counters,
+``trace.meta["elastic_events"]`` and the serve loop's private wall-clock
+report.  ``EventRecorder`` is the single structured sink they all feed:
+
+  * **spans** — a named interval with a monotonic start (``time.perf_counter``)
+    and a duration (stage compute, collective flush, checkpoint publish,
+    serving ticks),
+  * **instants** — a point event (a shard landing, an expansion decision, an
+    elastic fault, a hot swap),
+  * **counters** — a sampled numeric state (the per-stage clock totals).
+
+Every event carries ``tags`` (stage / host / lane context — recorder-level
+context set at stage boundaries merges into each event) and free-form
+JSON-safe ``fields``.  Emission is thread-safe (the prefetcher's background
+workers emit from their own threads) and totally ordered by ``seq``.
+
+Sinks: ``to_jsonl`` writes one JSON object per line (the schema below;
+``python -m repro.obs.events <path>`` validates it — CI runs this on the
+smoke run's log), and ``to_chrome_trace`` writes the Chrome ``trace_event``
+JSON that Perfetto (https://ui.perfetto.dev) renders as a timeline — spans
+become complete ("X") slices, instants thread-scoped marks, counters counter
+tracks; the ``host`` tag maps to the process lane.
+
+Recording is allocation-light but not free: the stack only emits when a
+recorder is wired (``ObsSpec.enabled``); every hook is a ``None`` check
+otherwise.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import threading
+import time
+from typing import Any, Iterable
+
+KINDS = ("span", "instant", "counter")
+
+#: The JSONL schema ``validate_events`` enforces (one object per line).
+SCHEMA = {
+    "name": "str — event name, dot-namespaced (e.g. 'stage.compute')",
+    "kind": f"str — one of {KINDS}",
+    "t": "float — time.perf_counter() at the event (span: at its start)",
+    "dur": "float|None — span duration in seconds (None for non-spans)",
+    "tags": "dict — context labels (stage/host/lane/...)",
+    "fields": "dict — JSON-safe event payload",
+    "seq": "int — total emission order (unique, strictly increasing)",
+    "thread": "str — emitting thread name",
+}
+
+
+@dataclasses.dataclass
+class Event:
+    """One telemetry record (see ``SCHEMA``)."""
+    name: str
+    kind: str
+    t: float
+    dur: float | None
+    tags: dict
+    fields: dict
+    seq: int
+    thread: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class EventRecorder:
+    """Thread-safe structured event sink with span/instant/counter emission.
+
+    ``set_context(stage=3)`` merges into every subsequent event's tags until
+    cleared — the engine sets the stage there once per boundary instead of
+    threading it through every call site.  Explicit per-event ``tags``
+    override the context."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._events: list[Event] = []
+        self._context: dict = {}
+        self._seq = 0
+
+    # ------------------------------------------------------------- emission
+    def _emit(self, name: str, kind: str, t: float, dur: float | None,
+              tags: dict | None, fields: dict) -> Event:
+        with self._lock:
+            ev = Event(name=str(name), kind=kind, t=float(t),
+                       dur=None if dur is None else float(dur),
+                       tags={**self._context, **(tags or {})},
+                       fields=fields, seq=self._seq,
+                       thread=threading.current_thread().name)
+            self._seq += 1
+            self._events.append(ev)
+        return ev
+
+    def instant(self, name: str, *, tags: dict | None = None,
+                fields: dict | None = None, **kw) -> Event:
+        # explicit ``fields=`` admits payload keys that collide with the
+        # signature (a field literally called "name", as run.meta carries)
+        return self._emit(name, "instant", time.perf_counter(), None,
+                          tags, {**(fields or {}), **kw})
+
+    def counter(self, name: str, *, tags: dict | None = None,
+                fields: dict | None = None, **kw) -> Event:
+        return self._emit(name, "counter", time.perf_counter(), None,
+                          tags, {**(fields or {}), **kw})
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, tags: dict | None = None, **fields):
+        """Time a block; emits ONE complete event at exit (start + dur), so
+        begin/end pairing can never be broken by an exception.  The yielded
+        dict collects extra fields discovered inside the block."""
+        extra: dict = {}
+        t0 = time.perf_counter()
+        try:
+            yield extra
+        finally:
+            self._emit(name, "span", t0, time.perf_counter() - t0,
+                       tags, {**fields, **extra})
+
+    # -------------------------------------------------------------- context
+    def set_context(self, **tags) -> None:
+        with self._lock:
+            self._context.update(tags)
+
+    def clear_context(self, *keys) -> None:
+        with self._lock:
+            if keys:
+                for k in keys:
+                    self._context.pop(k, None)
+            else:
+                self._context.clear()
+
+    # ---------------------------------------------------------------- reads
+    def events(self) -> list[Event]:
+        with self._lock:
+            return list(self._events)
+
+    def event_dicts(self) -> list[dict]:
+        return [e.to_dict() for e in self.events()]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    # ---------------------------------------------------------------- sinks
+    def to_jsonl(self, path) -> int:
+        """One JSON object per line (``SCHEMA``); returns the event count."""
+        evs = self.event_dicts()
+        with open(path, "w") as fh:
+            for e in evs:
+                fh.write(json.dumps(e, default=_json_safe) + "\n")
+        return len(evs)
+
+    def to_chrome_trace(self, path) -> int:
+        """Chrome ``trace_event`` JSON, viewable in Perfetto.  The ``host``
+        tag becomes the pid lane; each emitting thread gets a tid."""
+        out = chrome_trace(self.event_dicts())
+        with open(path, "w") as fh:
+            json.dump(out, fh, default=_json_safe)
+        return len(out["traceEvents"])
+
+
+def _json_safe(v):
+    """Last-resort JSON fallback (numpy scalars and the like)."""
+    item = getattr(v, "item", None)
+    if callable(item):
+        try:
+            return item()
+        except Exception:
+            pass
+    return str(v)
+
+
+# ------------------------------------------------------------- chrome export
+def chrome_trace(events: Iterable[dict]) -> dict:
+    """Event dicts -> a Chrome ``trace_event`` document (Perfetto-loadable)."""
+    tids: dict[str, int] = {}
+    trace: list[dict] = []
+    for e in events:
+        thread = e.get("thread", "main")
+        if thread not in tids:
+            tids[thread] = len(tids)
+            trace.append({"name": "thread_name", "ph": "M", "pid": 0,
+                          "tid": tids[thread],
+                          "args": {"name": thread}})
+        tags = e.get("tags") or {}
+        pid = tags.get("host", 0)
+        pid = pid if isinstance(pid, int) else 0
+        args = {**tags, **(e.get("fields") or {})}
+        row = {"name": e["name"], "ts": e["t"] * 1e6, "pid": pid,
+               "tid": tids[thread]}
+        if e["kind"] == "span":
+            row.update(ph="X", dur=(e.get("dur") or 0.0) * 1e6, args=args)
+        elif e["kind"] == "counter":
+            row.update(ph="C", args={k: v for k, v in args.items()
+                                     if isinstance(v, (int, float))
+                                     and not isinstance(v, bool)})
+        else:
+            row.update(ph="i", s="t", args=args)
+        trace.append(row)
+    return {"traceEvents": trace, "displayTimeUnit": "ms"}
+
+
+# ---------------------------------------------------------------- jsonl load
+def from_jsonl(path) -> list[dict]:
+    """Load an ``EventRecorder.to_jsonl`` log back into event dicts."""
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def validate_events(events: Iterable[dict]) -> list[str]:
+    """Schema errors in an event stream ([] = valid).  Checks each record's
+    shape against ``SCHEMA`` plus the stream invariants (unique strictly
+    increasing ``seq``, non-negative span durations)."""
+    errors: list[str] = []
+    last_seq = None
+    for i, e in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        missing = [k for k in SCHEMA if k not in e]
+        if missing:
+            errors.append(f"{where}: missing keys {missing}")
+            continue
+        if not isinstance(e["name"], str) or not e["name"]:
+            errors.append(f"{where}: bad name {e['name']!r}")
+        if e["kind"] not in KINDS:
+            errors.append(f"{where}: bad kind {e['kind']!r}")
+        if not isinstance(e["t"], (int, float)):
+            errors.append(f"{where}: bad t {e['t']!r}")
+        if e["kind"] == "span":
+            if not isinstance(e["dur"], (int, float)) or e["dur"] < 0:
+                errors.append(f"{where}: span needs dur >= 0, "
+                              f"got {e['dur']!r}")
+        elif e["dur"] is not None:
+            errors.append(f"{where}: non-span carries dur {e['dur']!r}")
+        if not isinstance(e["tags"], dict) or not isinstance(e["fields"],
+                                                             dict):
+            errors.append(f"{where}: tags/fields must be objects")
+        if not isinstance(e["seq"], int) or isinstance(e["seq"], bool):
+            errors.append(f"{where}: bad seq {e['seq']!r}")
+        elif last_seq is not None and e["seq"] <= last_seq:
+            errors.append(f"{where}: seq {e['seq']} not increasing "
+                          f"(previous {last_seq})")
+        else:
+            last_seq = e["seq"]
+        if not isinstance(e["thread"], str):
+            errors.append(f"{where}: bad thread {e['thread']!r}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    """``python -m repro.obs.events <events.jsonl>`` — CI schema gate."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Validate an observability JSONL event log")
+    ap.add_argument("path", help="events.jsonl written by EventRecorder")
+    args = ap.parse_args(argv)
+    events = from_jsonl(args.path)
+    errors = validate_events(events)
+    if errors:
+        for err in errors[:50]:
+            print(f"INVALID: {err}")
+        print(f"{args.path}: {len(errors)} schema error(s) "
+              f"in {len(events)} events")
+        return 1
+    kinds: dict[str, int] = {}
+    for e in events:
+        kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+    print(f"{args.path}: {len(events)} events valid "
+          + " ".join(f"{k}={v}" for k, v in sorted(kinds.items())))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,151 @@
+"""Opt-in profiling: ``jax.profiler`` capture + HLO FLOP/byte estimates.
+
+Two complementary views, both riding the existing ``launch/hlo.py`` path:
+
+  * ``profiler_trace(logdir)`` wraps a run in ``jax.profiler.trace`` so the
+    XLA-level timeline lands in TensorBoard format (``ObsSpec.profile`` +
+    ``jax_profiler_dir``);
+  * ``StageProfiler`` lowers each stage's kernel once per (kernel, window)
+    shape and emits a ``profile.stage`` event with analytic FLOPs, bytes and
+    roofline seconds — the per-stage cost model the ROADMAP's pallas-fusion
+    arc tunes against.  Lowering is cached and failures degrade to an
+    ``error`` field; profiling must never kill a run.
+
+``seed_kernel_costs`` applies the same estimator to the seed pallas-kernel
+oracles (benchmarks/roofline.py plots these).
+
+Deliberately NOT imported by ``repro.obs.__init__``: this module needs jax;
+events/metrics/report stay stdlib-importable.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from ..launch import hlo
+
+# TPU v5e roofline constants, per chip (same as launch/dryrun.py)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+
+
+def profiler_trace(logdir):
+    """``jax.profiler.trace`` when a log dir is given, no-op otherwise."""
+    if not logdir:
+        return contextlib.nullcontext()
+    return jax.profiler.trace(str(logdir))
+
+
+def _roofline(flops: float, nbytes: float) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "roofline_us": max(compute_s, memory_s) * 1e6,
+        "bottleneck": "memory" if memory_s > compute_s else "compute",
+        "intensity_flops_per_byte": flops / nbytes if nbytes else 0.0,
+    }
+
+
+def cost_from_compiled(compiled) -> dict:
+    """FLOP/byte estimates for a compiled computation: XLA's own
+    ``cost_analysis`` plus the repo's HLO-text analyzer as fallback and
+    collective detail."""
+    out = {"flops": 0.0, "bytes": 0.0}
+    try:
+        raw = hlo.raw_cost_analysis(compiled)
+        out["flops"] = float(raw.get("flops", 0.0) or 0.0)
+        out["bytes"] = float(raw.get("bytes accessed", 0.0) or 0.0)
+    except Exception:
+        pass
+    try:
+        an = hlo.analyze(compiled.as_text())
+        out["hlo_flops"] = float(an.get("flops", 0.0))
+        out["hlo_traffic_bytes"] = float(an.get("traffic_bytes", 0.0))
+        out["hlo_wire_bytes"] = float(an.get("wire_bytes", 0.0))
+        if out["flops"] <= 0.0:
+            out["flops"] = out["hlo_flops"]
+        if out["bytes"] <= 0.0:
+            out["bytes"] = out["hlo_traffic_bytes"]
+    except Exception:
+        pass
+    return out
+
+
+def hlo_cost(fn, *args, static_argnames=(), **kwargs) -> dict:
+    """Lower + compile ``fn`` on ``args`` and estimate FLOPs/bytes plus the
+    roofline terms.  Costs the compile — call once per shape."""
+    compiled = jax.jit(fn, static_argnames=tuple(static_argnames)) \
+        .lower(*args, **kwargs).compile()
+    cost = cost_from_compiled(compiled)
+    cost.update(_roofline(cost["flops"], cost["bytes"]))
+    return cost
+
+
+# ---------------------------------------------------------- seed kernel costs
+def _seed_kernel_cases() -> dict:
+    """(fn, args) per seed pallas kernel, over the reference oracles at
+    bench-representative small shapes (kernels/ref.py signatures)."""
+    from ..kernels import ref
+
+    f32 = jnp.float32
+    X = jnp.ones((256, 64), f32)
+    y = jnp.ones((256,), f32)
+    w = jnp.ones((64,), f32)
+    q = jnp.ones((1, 2, 128, 64), f32)
+    u = jnp.ones((1, 64, 32), f32)
+    bc = jnp.ones((1, 64, 16), f32)
+    A_log = jnp.zeros((32, 16), f32)
+    D = jnp.ones((32,), f32)
+    ab = jnp.ones((1, 64, 32), f32)
+    return {
+        "linear_forward": (ref.linear_forward, (X, w)),
+        "linear_value_grad": (ref.linear_value_grad, (X, y, w)),
+        "flash_attention": (ref.flash_attention, (q, q, q)),
+        "ssm_scan": (ref.ssm_scan, (u, u, bc, bc, A_log, D)),
+        "rglru_scan": (ref.rglru_scan, (ab, ab)),
+    }
+
+
+def seed_kernel_costs() -> dict:
+    """Per-kernel FLOPs/bytes/roofline for the seed pallas kernels.  Kernels
+    that fail to lower report an ``error`` instead of aborting the sweep."""
+    out = {}
+    for name, (fn, args) in _seed_kernel_cases().items():
+        try:
+            out[name] = hlo_cost(fn, *args)
+        except Exception as exc:
+            out[name] = {"error": f"{type(exc).__name__}: {exc}"}
+    return out
+
+
+# ------------------------------------------------------------ stage profiling
+class StageProfiler:
+    """Per-stage analytic cost events.  The engine calls ``observe`` before
+    each stage's first kernel launch; the profiler lowers the same callable
+    on the same arguments once per (kernel, window size) and emits one
+    ``profile.stage`` event.  Every failure mode is caught and reported in
+    the event — profiling never alters the run."""
+
+    def __init__(self, recorder):
+        self.recorder = recorder
+        self._seen: set = set()
+
+    def observe(self, info, kernel, args, kwargs) -> None:
+        n_t = int(getattr(info, "n_t", 0))
+        key = (id(kernel), n_t)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        fields = {"stage": int(getattr(info, "stage", -1)), "n_t": n_t}
+        try:
+            static = tuple(k for k, v in kwargs.items()
+                           if isinstance(v, int) and not isinstance(v, bool))
+            cost = hlo_cost(kernel, *args, static_argnames=static, **kwargs)
+            fields.update(cost)
+        except Exception as exc:
+            fields["error"] = f"{type(exc).__name__}: {exc}"
+        self.recorder.instant("profile.stage", **fields)

@@ -20,6 +20,7 @@ StageCheckpointer, BetEngine — only the corpus and the stage loop differ
 (``BetEngine.run_online``)."""
 from __future__ import annotations
 
+import pathlib
 import time
 
 import numpy as np
@@ -37,6 +38,8 @@ from ..data.plane import StreamingDataset
 from ..elastic import StageCheckpointer
 from ..launch import steps
 from ..models import transformer as T
+from ..obs import EventRecorder, RunReport
+from ..obs.metrics import attach_clock, attach_dataset, attach_server
 from .ingest import OnlineShardStore
 from .policy import TrafficDriven
 from .swap import BetServer, CheckpointWatcher
@@ -152,6 +155,11 @@ class ServeTrainLoop:
         self.staleness_warm: list[int] = []
         self.serve_wall_s = 0.0     # generate + log + swap-poll, per tick
         self.trace = None
+        # the serve loop always records: serving and training feed the same
+        # telemetry stream, so report() is a RunReport like any offline run
+        self.recorder = EventRecorder()
+        attach_server(self.server, self.recorder)
+        self.run_report: RunReport | None = None
 
     # ------------------------------------------------------------- serving
     def tick(self) -> bool:
@@ -167,23 +175,31 @@ class ServeTrainLoop:
             return False
         self.ticks += 1
         t0 = time.perf_counter()
-        prompts = self.traffic.next()
-        if self.spec.serve.greedy:
-            out = self.server.generate(jnp.asarray(prompts),
-                                       gen_tokens=self.gen_tokens)
-        else:
-            self._key, sub = jax.random.split(self._key)
-            out = self.server.generate(jnp.asarray(prompts),
-                                       gen_tokens=self.gen_tokens,
-                                       greedy=False, key=sub)
-        self.store.append(
-            np.concatenate([prompts, np.asarray(out)], axis=1))
-        if self.watcher is not None:
-            # sampled before the poll: the weights this tick's request was
-            # actually served under, vs the newest published checkpoint
-            if self.server.swap_count > 0:
-                self.staleness_warm.append(self.watcher.staleness())
-            self.watcher.poll()
+        with self.recorder.span("serve.tick", tick=self.ticks):
+            prompts = self.traffic.next()
+            if self.spec.serve.greedy:
+                out = self.server.generate(jnp.asarray(prompts),
+                                           gen_tokens=self.gen_tokens)
+            else:
+                self._key, sub = jax.random.split(self._key)
+                out = self.server.generate(jnp.asarray(prompts),
+                                           gen_tokens=self.gen_tokens,
+                                           greedy=False, key=sub)
+            self.store.append(
+                np.concatenate([prompts, np.asarray(out)], axis=1))
+            self.recorder.instant(
+                "serve.ingest", examples=int(prompts.shape[0]),
+                sealed=self.store.num_examples,
+                total=self.store.total_logged)
+            if self.watcher is not None:
+                # sampled before the poll: the weights this tick's request
+                # was actually served under, vs the newest published
+                # checkpoint
+                if self.server.swap_count > 0:
+                    stale = self.watcher.staleness()
+                    self.staleness_warm.append(stale)
+                    self.recorder.instant("serve.staleness", staleness=stale)
+                self.watcher.poll()
         self.serve_wall_s += time.perf_counter() - t0
         return True
 
@@ -230,6 +246,19 @@ class ServeTrainLoop:
             carry_state=spec.schedule.carry_state)
         engine.stage_callback = checkpointer
         clock = SimulatedClock(**spec.schedule.clock)
+        # one stream for both halves of the closed loop: the engine's stage
+        # spans land between the serving ticks that fed them
+        engine.recorder = self.recorder
+        attach_dataset(dataset, self.recorder)
+        attach_clock(clock, self.recorder)
+        checkpointer.recorder = self.recorder
+        for p in wired:
+            p.recorder = self.recorder
+        self.recorder.instant("run.meta", fields={
+            "name": spec.name, "n": 0,      # open corpus: n unknown up front
+            "hosts": 1, "policy": spec.policy.name,
+            "n0": spec.schedule.n0, "growth": spec.schedule.growth,
+            "row_bytes": int(self.store.example_nbytes)})
         try:
             self.trace = engine.run_online(
                 dataset, optimizer, objective, policy,
@@ -253,6 +282,10 @@ class ServeTrainLoop:
     def report(self, dataset, policy, checkpointer, clock) -> dict:
         meter = dataset.meter.snapshot()
         holds = sum(p.holds_total for p in _traffic_members(policy))
+        # the same per-stage summary an offline Session prints: both sides
+        # of the loop fold out of the one event stream
+        rr = RunReport.from_recorder(self.recorder)
+        self.run_report = rr
         rep = {
             "ticks": self.ticks,
             "requests": self.server.requests_completed,
@@ -268,7 +301,19 @@ class ServeTrainLoop:
             "data_plane": meter,
             "clock": clock.snapshot(),
             "checkpoints": list(checkpointer.saved),
+            "stage_table": rr.stage_rows(),
+            "serve_events": rr.serve_summary(),
         }
+        obs = self.spec.obs
+        if obs.enabled and obs.dir:
+            d = pathlib.Path(obs.dir)
+            d.mkdir(parents=True, exist_ok=True)
+            self.recorder.to_jsonl(d / "events.jsonl")
+            if obs.chrome_trace:
+                self.recorder.to_chrome_trace(d / "trace.json")
+            if obs.report:
+                rr.save(d)
+            rep["obs_dir"] = str(d)
         if self.watcher is not None:
             rep["staleness"] = {
                 "samples": self.watcher.staleness_samples,

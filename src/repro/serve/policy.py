@@ -54,6 +54,7 @@ class TrafficDriven(ExpansionPolicy):
         self.pump = None            # callable: one serving tick (attach())
         self._holds = 0
         self.holds_total = 0        # lifetime holds (report/bench surface)
+        self.recorder = None        # EventRecorder: emits serve.hold
 
     def attach(self, source, pump=None) -> "TrafficDriven":
         """Wire the live ingestion store and (optionally) the serving tick
@@ -80,6 +81,10 @@ class TrafficDriven(ExpansionPolicy):
         # landing while the engine keeps stepping on the resident window
         self._holds += 1
         self.holds_total += 1
+        if self.recorder is not None:
+            self.recorder.instant(
+                "serve.hold", stage=info.stage, n_next=info.n_next,
+                sealed=self.source.num_examples, holds=self._holds)
         if self.pump is not None:
             self.pump()
             if self._arrived(info.n_next):

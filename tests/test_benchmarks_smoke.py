@@ -46,3 +46,12 @@ def test_bench_smoke_asserts_every_json_anchor():
     anchors_after = {p.name: p.stat().st_mtime_ns
                      for p in REPO_ROOT.glob("BENCH_*.json")}
     assert anchors_after == anchors_before
+    # the smoke run leaves its telemetry next to the reports: a
+    # schema-valid event log plus the RunReport (the CI artifact set)
+    obs = smoke_dir / "obs_data"
+    from repro.obs import from_jsonl, validate_events
+    events = from_jsonl(obs / "events.jsonl")
+    assert events and validate_events(events) == []
+    event_report = json.loads((obs / "report.json").read_text())
+    assert event_report["claims"]["overlap_ge_half"] is True
+    assert (obs / "report.txt").read_text().strip()

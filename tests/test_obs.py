@@ -1,0 +1,288 @@
+"""The telemetry plane (tier1): EventRecorder semantics under threads, the
+prefetcher's cross-thread event ordering, RunReport round-trip from JSONL
+with claim recomputation cross-checked against the live meters, resumed-run
+counter continuity, and the obs-off bit-identity guarantee."""
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointSpec, DataSpec, ObsSpec, OptimizerSpec,
+                       PolicySpec, RunSpec, ScheduleSpec, SpecError, build,
+                       make_store)
+from repro.data.prefetch import Prefetcher
+from repro.data.shards import DataAccessMeter
+from repro.obs import (EventRecorder, MetricsRegistry, RunReport,
+                       chrome_trace, from_jsonl, validate_events)
+from repro.obs import events as ev
+from repro.obs.metrics import attach_clock, attach_meter, attach_prefetcher
+
+pytestmark = pytest.mark.tier1
+
+DATA = DataSpec(dataset="w8a_like", scale=0.02, plane="plane", shard_size=32)
+FIXED = PolicySpec("fixed_steps", {"inner_steps": 2, "final_steps": 3})
+OPT = OptimizerSpec("newton_cg", {"hessian_fraction": 1.0})
+
+
+def _spec(**kw):
+    base = dict(data=DATA, policy=FIXED, optimizer=OPT,
+                schedule=ScheduleSpec(n0=32))
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# --------------------------------------------------------------- recorder
+def test_recorder_context_spans_and_jsonl_roundtrip(tmp_path):
+    rec = EventRecorder()
+    rec.set_context(stage=3)
+    rec.instant("a", x=1)
+    with rec.span("b", window=64) as extra:
+        extra["steps"] = 5
+    rec.counter("c", tags={"stage": 9}, v=2.5)
+    rec.clear_context("stage")
+    rec.instant("d", fields={"name": "collides-with-kwarg"})
+    evs = rec.event_dicts()
+    assert [e["name"] for e in evs] == ["a", "b", "c", "d"]
+    assert evs[0]["tags"] == {"stage": 3}
+    assert evs[1]["kind"] == "span" and evs[1]["dur"] >= 0
+    assert evs[1]["fields"] == {"window": 64, "steps": 5}
+    assert evs[2]["tags"] == {"stage": 9}      # explicit tags win
+    assert evs[3]["tags"] == {} and evs[3]["fields"]["name"].startswith("col")
+    assert [e["seq"] for e in evs] == [0, 1, 2, 3]
+    assert validate_events(evs) == []
+    path = tmp_path / "events.jsonl"
+    assert rec.to_jsonl(path) == 4
+    assert from_jsonl(path) == evs
+    assert ev.main([str(path)]) == 0
+
+
+def test_recorder_span_emits_even_on_exception():
+    rec = EventRecorder()
+    with pytest.raises(ValueError):
+        with rec.span("boom"):
+            raise ValueError("x")
+    (e,) = rec.event_dicts()
+    assert e["name"] == "boom" and e["kind"] == "span" and e["dur"] >= 0
+
+
+def test_recorder_thread_safe_and_chrome_export():
+    rec = EventRecorder()
+
+    def emit(i):
+        for j in range(50):
+            rec.instant("t", worker=i, j=j)
+
+    threads = [threading.Thread(target=emit, args=(i,), name=f"w{i}")
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = rec.event_dicts()
+    assert len(evs) == 200
+    assert [e["seq"] for e in evs] == list(range(200))   # total order
+    assert validate_events(evs) == []
+    rec2 = EventRecorder()
+    with rec2.span("s", tags={"host": 1}):
+        pass
+    rec2.counter("c", n=3, label="dropped-from-counter-track")
+    rec2.instant("i")
+    doc = chrome_trace(rec2.event_dicts())
+    rows = {r["name"]: r for r in doc["traceEvents"] if r.get("ph") != "M"}
+    assert rows["s"]["ph"] == "X" and rows["s"]["pid"] == 1
+    assert rows["s"]["dur"] >= 0
+    assert rows["c"]["ph"] == "C" and rows["c"]["args"] == {"n": 3}
+    assert rows["i"]["ph"] == "i"
+    assert any(r.get("ph") == "M" for r in doc["traceEvents"])
+
+
+def test_validate_events_flags_malformed(tmp_path, capsys):
+    ok = {"name": "a", "kind": "instant", "t": 0.0, "dur": None,
+          "tags": {}, "fields": {}, "seq": 0, "thread": "m"}
+    bad = [
+        {**ok, "kind": "bogus", "seq": 1},
+        {**ok, "dur": 1.0, "seq": 2},               # non-span carries dur
+        {**ok, "seq": 2},                           # seq not increasing
+        {k: v for k, v in ok.items() if k != "tags"},
+    ]
+    errors = validate_events([ok] + bad)
+    assert len(errors) == 4
+    assert any("bad kind" in e for e in errors)
+    assert any("carries dur" in e for e in errors)
+    assert any("not increasing" in e for e in errors)
+    assert any("missing keys" in e for e in errors)
+    path = tmp_path / "bad.jsonl"
+    path.write_text("\n".join(json.dumps(e) for e in [ok] + bad) + "\n")
+    assert ev.main([str(path)]) == 1
+    assert "INVALID:" in capsys.readouterr().out
+
+
+# ----------------------------------------------------------- metric adapters
+def test_attach_meter_and_clock_mirror_every_update():
+    rec = EventRecorder()
+    meter = attach_meter(DataAccessMeter(), rec, host=0)
+    meter.record_load(nbytes=100, examples=4, duration_s=0.5, blocked_s=0.1,
+                      prefetched=True)
+    meter.record_upload(nbytes=100, examples=4)
+    meter.record_access(40)
+    from repro.core.timemodel import SimulatedClock
+    clock = attach_clock(SimulatedClock(p=10.0, a=1.0, s=5.0), rec)
+    clock.batch_update(8)
+    rr = RunReport.from_recorder(rec)
+    assert rr.matches_meter(meter.snapshot()), \
+        rr.meter_mismatches(meter.snapshot())
+    charge = rr.named("clock.charge")[0]["fields"]
+    assert charge["op"] == "batch_update" and charge["n"] == 8
+    assert charge["time"] == clock.time
+    reg = MetricsRegistry.from_events(rec.event_dicts())
+    snap = reg.snapshot()
+    assert snap["counters"]["meter.load.nbytes"] == 100
+    assert snap["counters"]["meter.access.examples"] == 40
+
+
+def test_attach_meter_is_idempotent_and_snapshot_safe():
+    rec = EventRecorder()
+    meter = DataAccessMeter()
+    attach_meter(meter, rec)
+    attach_meter(meter, rec)                # second attach must not stack
+    meter.record_access(7)
+    assert len([e for e in rec.event_dicts()
+                if e["name"] == "meter.access"]) == 1
+    # snapshot/restore walk dataclass fields only: the shadowed bound
+    # methods never leak into checkpoint state
+    snap = meter.snapshot()
+    assert set(snap) >= {"examples_accessed", "overlap_fraction"}
+    fresh = DataAccessMeter()
+    fresh.restore(snap)
+    assert fresh.examples_accessed == 7
+
+
+# --------------------------------------------------- prefetcher event order
+def test_prefetcher_events_ordered_across_threads():
+    arr = np.arange(64, dtype=np.float32)[:, None] * np.ones((1, 4),
+                                                             np.float32)
+    store = make_store("memory", arr, 8, delay_s=0.002)
+    rec = EventRecorder()
+    pf = Prefetcher([store], DataAccessMeter())
+    attach_prefetcher(pf, rec, host=0)
+    with pf:
+        pf.schedule([0, 1, 2])
+        dropped = pf.cancel([2])
+        for i in (0, 1, 3):                  # 3 is a cold demand load
+            pf.take(i)
+    assert dropped == [2]
+    evs = rec.event_dicts()
+    assert all(e["tags"] == {"host": 0} for e in evs)
+    by_shard: dict = {}
+    for e in evs:
+        by_shard.setdefault(e["fields"]["shard"], {})[e["name"]] = e
+    for shard in (0, 1, 3):
+        seen = by_shard[shard]
+        # the pinned ordering: scheduled (driver) < loaded (worker thread)
+        # < landed (driver), interleaved by the recorder's total order
+        if shard != 3:
+            assert seen["prefetch.scheduled"]["seq"] \
+                < seen["prefetch.loaded"]["seq"] \
+                < seen["prefetch.landed"]["seq"]
+        assert seen["prefetch.loaded"]["thread"].startswith("bet-prefetch")
+        assert not seen["prefetch.landed"]["thread"].startswith("bet-pref")
+        assert seen["prefetch.landed"]["fields"]["prefetched"] == (shard != 3)
+    assert "prefetch.landed" not in by_shard.get(2, {})
+    assert "prefetch.cancelled" in by_shard[2]
+    assert validate_events(evs) == []
+
+
+# ------------------------------------------------------- session round trip
+def test_session_run_report_roundtrip_claims_and_meter_match(tmp_path):
+    spec = _spec(obs=ObsSpec(enabled=True, dir=str(tmp_path / "obs"),
+                             chrome_trace=True))
+    sess = build(spec)
+    tr = sess.run()
+    rr = sess.run_report()
+    snap = sess.meters["data_plane"]
+    assert rr.matches_meter(snap), rr.meter_mismatches(snap)
+    claims = rr.claims()
+    assert all(v for v in claims.values()), claims
+    rows = rr.stage_rows()
+    assert len(rows) == tr.meta["stages"]
+    assert rows[-1]["window"] == sess.dataset.n
+    assert sum(r["steps"] for r in rows) == len(tr.points)
+    # clock deltas re-sum to the final cumulative clock state
+    assert sum(r["clock_accesses"] for r in rows) == sess.clock.data_accesses
+    # on-disk round trip: the JSONL alone reproduces the whole report
+    files = tr.meta["obs_files"]
+    events = from_jsonl(files["events"])
+    assert validate_events(events) == []
+    rr2 = RunReport.from_jsonl(files["events"])
+    assert rr2.to_dict() == rr.to_dict()
+    assert rr2.matches_meter(snap)
+    chrome = json.loads((tmp_path / "obs" / "trace.json").read_text())
+    assert chrome["traceEvents"]
+    report = json.loads((tmp_path / "obs" / "report.json").read_text())
+    assert report["claims"] == {k: bool(v) if v is not None else None
+                               for k, v in claims.items()}
+    assert (tmp_path / "obs" / "report.txt").read_text().startswith("stage")
+
+
+def test_run_report_without_obs_raises():
+    sess = build(_spec())
+    assert sess.recorder is None
+    with pytest.raises(SpecError, match="obs.enabled"):
+        sess.run_report()
+
+
+def test_obs_disabled_trajectory_bit_identical():
+    tr_off = build(_spec()).run()
+    tr_on = build(_spec(obs=ObsSpec(enabled=True))).run()
+    for col in ("f_window", "f_full", "time", "accesses"):
+        assert tr_on.column(col) == tr_off.column(col)
+
+
+# --------------------------------------------------------- resume continuity
+def test_resumed_run_continues_counters_bit_compatibly(tmp_path):
+    ref = build(_spec(obs=ObsSpec(enabled=True)))
+    ref_tr = ref.run()
+    ref_final = ref.run_report().named("stage.totals")[-1]["fields"]
+
+    spec = _spec(obs=ObsSpec(enabled=True),
+                 checkpoint=CheckpointSpec(directory=str(tmp_path), keep=99))
+
+    class _Killed(Exception):
+        pass
+
+    sess = build(spec)
+
+    def die(end):
+        if end.info.stage == 1:
+            raise _Killed
+
+    sess.on_stage(die)
+    with pytest.raises(_Killed):
+        sess.run()
+    killed_totals = RunReport.from_recorder(sess.recorder) \
+        .named("stage.totals")
+
+    resumed = build(spec.replace(checkpoint=spec.checkpoint.replace(
+        resume=True)))
+    tr = resumed.run()
+    rr = RunReport.from_recorder(resumed.recorder)
+    totals = rr.named("stage.totals")
+    # the resumed stream continues the cumulative counters exactly where
+    # the checkpointed stage left them: stitched stage sequence, no reset
+    assert [_t["tags"]["stage"] for _t in killed_totals] == [0, 1]
+    assert [_t["tags"]["stage"] for _t in totals] == \
+        list(range(2, 2 + len(totals)))
+    stitched = killed_totals + totals
+    assert [s["fields"]["accesses"] for s in stitched] == \
+        [t["fields"]["accesses"]
+         for t in ref.run_report().named("stage.totals")]
+    final = totals[-1]["fields"]
+    for k in ("time", "accesses", "loaded", "steps", "window"):
+        assert final[k] == ref_final[k], k
+    # the restored meters also land bit-compatibly (Thm 4.1 continuity)
+    assert resumed.meters["clock"] == ref.meters["clock"]
+    assert tr.column("f_full") == ref_tr.column("f_full")[
+        len(ref_tr.column("f_full")) - len(tr.column("f_full")):]
