@@ -1,0 +1,152 @@
+"""Workload-matrix benchmark (ROADMAP item 5 / the workloads subsystem).
+
+Runs every registered workload preset — the full ``arch@scenario`` matrix
+over the model zoo — at tiny sizes through ``repro.workloads.sweep`` and
+asserts the per-preset evidence as one claim set:
+
+  * ``presets_build``           — every preset's RunSpec composes through
+    ``build()`` (or ``repro.serve.build_loop`` for serve scenarios).
+  * ``train_ge_2_stages``       — every preset ran >= 2 expansion stages
+    under the BET engine.
+  * ``le_one_transfer_per_stage`` — the engine's own transfer counter
+    stayed within one device->host flush per stage (plus one per held
+    chunk for traffic-driven scenarios).
+  * ``zero_resident_reupload``  — every plane-backed preset re-uploaded
+    nothing resident on expansion (obs RunReport claim, recomputed from
+    the event stream).
+  * ``stream_overlap_ge_half``  — the throttled ``stream`` scenarios
+    overlapped >= 50% of load time with compute.
+  * ``mamba_kernel_routed`` / ``rglru_kernel_routed`` — the mamba/rglru
+    presets' training traffic demonstrably dispatched through
+    ``kernels/ssm_scan.py`` / ``kernels/rglru_scan.py`` (trace-time
+    ``ops.CALLS`` counters), not the XLA fallback.
+  * ``mamba_kernel_parity`` / ``rglru_kernel_parity`` — those kernels
+    agree with the ``kernels/ref.py`` oracles, forward AND gradient, at
+    workload-like shapes.
+  * ``losses_finite``           — every preset's trained objective stayed
+    finite.
+
+The per-preset rows (claims, kernel dispatch counts, stage/transfer
+counts, wall time, obs artifact dir) land in the JSON report; each
+preset's event log + RunReport live under ``obs_workloads/<preset>/obs``
+next to the report — the CI artifact set.
+
+    PYTHONPATH=src:. python -m benchmarks.bench_workloads \
+        [--only falcon-mamba@stream ...] [--out BENCH_workloads.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.workloads import PRESETS
+from repro.workloads.sweep import sweep
+
+from . import common
+
+
+def _allclose(a, b, tol=2e-2) -> bool:
+    return bool(jnp.allclose(a, b, rtol=tol, atol=tol))
+
+
+def _kernel_parity() -> dict:
+    """Pallas kernels vs kernels/ref.py oracles — forward and gradient —
+    at the shapes the tiny presets actually train (B=4, S=32, d=128)."""
+    k = jax.random.split(jax.random.key(7), 6)
+    out = {}
+    # ssm_scan (mamba): u/delta (B,S,d_inner), B/C (B,S,N), A_log (d,N)
+    u = jax.random.normal(k[0], (4, 32, 128), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(k[1], (4, 32, 128)))
+    Bs = jax.random.normal(k[2], (4, 32, 8))
+    Cs = jax.random.normal(k[3], (4, 32, 8))
+    Al = jnp.log(jnp.tile(jnp.arange(1, 9, dtype=jnp.float32)[None],
+                          (128, 1)))
+    D = jnp.ones((128,))
+    fwd_p = ops.ssm_scan(u, dt, Bs, Cs, Al, D)
+    fwd_r = ref.ssm_scan(u, dt, Bs, Cs, Al, D)
+    g_p = jax.grad(lambda u: ops.ssm_scan(u, dt, Bs, Cs, Al, D).sum())(u)
+    g_r = jax.grad(lambda u: ref.ssm_scan(u, dt, Bs, Cs, Al, D).sum())(u)
+    out["mamba_kernel_parity"] = _allclose(fwd_p, fwd_r) and \
+        _allclose(g_p, g_r)
+    # rglru_scan (recurrentgemma): a in (0,1), b gated inputs, (B,S,W)
+    a = jax.nn.sigmoid(jax.random.normal(k[4], (4, 32, 64)))
+    b = jax.random.normal(k[5], (4, 32, 64))
+    fwd_p = ops.rglru_scan(a, b)
+    fwd_r = ref.rglru_scan(a, b)
+    g_p = jax.grad(lambda b: ops.rglru_scan(a, b).sum())(b)
+    g_r = jax.grad(lambda b: ref.rglru_scan(a, b).sum())(b)
+    out["rglru_kernel_parity"] = _allclose(fwd_p, fwd_r) and \
+        _allclose(g_p, g_r)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="preset names (default: the whole matrix)")
+    ap.add_argument("--out", type=str, default="BENCH_workloads.json")
+    args, _ = ap.parse_known_args()
+
+    out_path = pathlib.Path(args.out)
+    workdir = out_path.resolve().parent / "obs_workloads"
+    names = args.only or [p.name for p in PRESETS]
+
+    results = sweep(names, workdir, progress=lambda r: print(
+        f"workload,{r.name},{'ok' if r.ok else 'FAIL'},"
+        f"{r.stages}stages,{r.wall_s:.1f}s", flush=True))
+    by_family = {}
+    for r in results:
+        by_family.setdefault(r.family, []).append(r)
+
+    def _all(pred, rs=results):
+        return all(pred(r) for r in rs)
+
+    claims = {
+        "presets_build": _all(lambda r: r.claims.get("builds") is True),
+        "train_ge_2_stages":
+            _all(lambda r: r.claims.get("trained_ge_2_stages") is True),
+        "le_one_transfer_per_stage":
+            _all(lambda r: r.claims.get("le_one_transfer_per_stage")
+                 is True),
+        "losses_finite":
+            _all(lambda r: r.claims.get("loss_finite") is True),
+        "zero_resident_reupload": _all(
+            lambda r: r.claims.get("zero_resident_reupload", True)
+            is not False),
+        "stream_overlap_ge_half": _all(
+            lambda r: r.claims.get("overlap_ge_half") is True,
+            [r for r in results if "stream" in r.scenario]),
+        "mamba_kernel_routed": _all(
+            lambda r: r.claims.get("kernel_routed") is True,
+            by_family.get("mamba", [])) and bool(by_family.get("mamba")),
+        "rglru_kernel_routed": _all(
+            lambda r: r.claims.get("kernel_routed") is True,
+            by_family.get("rglru", [])) and bool(by_family.get("rglru")),
+    }
+    claims.update(_kernel_parity())
+    claims["matrix_green"] = _all(lambda r: r.ok)
+
+    report = {
+        "bench": "workloads",
+        "presets": [r.to_dict() for r in results],
+        "families": sorted(by_family),
+        "obs_dir": str(workdir),
+        "claims": claims,
+    }
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out_path}", flush=True)
+
+    details = {k: "; ".join(
+        f"{r.name}: {r.error or {c: v for c, v in r.claims.items() if not v}}"
+        for r in results if not r.ok) or "see per-preset rows"
+        for k in claims}
+    common.check_claims("bench_workloads", claims, details)
+
+
+if __name__ == "__main__":
+    main()

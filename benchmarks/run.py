@@ -30,7 +30,7 @@ MODULES = ["fig2_simulated_runtime", "fig3_wallclock", "fig4_hw_accel",
            "fig5_parallel", "fig6_test_acc", "fig7_inner_opt",
            "fig8_dsm_theta", "table1_time_model", "thm41_data_access",
            "ablation_schedule", "bench_engine", "bench_data", "bench_dist",
-           "bench_elastic", "bench_serve", "roofline"]
+           "bench_elastic", "bench_serve", "bench_workloads", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -7,22 +7,23 @@
 from .specs import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
                     ObsSpec, OptimizerSpec, PolicySpec, RunSpec,
                     ScheduleSpec, ServeSpec, SpecError, TopologySpec)
-from .registry import (OPTIMIZERS, POLICIES, STORES, TOPOLOGIES,
+from .registry import (OPTIMIZERS, POLICIES, STORES, TOPOLOGIES, WORKLOADS,
                        build_optimizer, build_policy, make_store,
                        optimizer_spec_of, register_optimizer,
-                       register_policy, register_store)
+                       register_policy, register_store, register_workload)
 from .session import (Session, build, check_resume_spec, convex_problem,
-                      resume_session)
+                      resume_session, run)
 from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
 
 __all__ = [
     "RunSpec", "DataSpec", "PolicySpec", "OptimizerSpec", "ScheduleSpec",
     "TopologySpec", "ElasticSpec", "CheckpointSpec", "ServeSpec",
-    "ObsSpec", "ModelSpec", "SpecError", "Session", "build",
+    "ObsSpec", "ModelSpec", "SpecError", "Session", "build", "run",
     "convex_problem",
     "resume_session", "check_resume_spec",
-    "POLICIES", "OPTIMIZERS", "STORES", "TOPOLOGIES",
+    "POLICIES", "OPTIMIZERS", "STORES", "TOPOLOGIES", "WORKLOADS",
     "build_policy", "build_optimizer", "optimizer_spec_of", "make_store",
     "register_policy", "register_optimizer", "register_store",
+    "register_workload",
     "LMStepOptimizer", "TokenWindows", "make_lm_objective",
 ]

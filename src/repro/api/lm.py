@@ -62,7 +62,7 @@ class TokenWindows:
         return self.tokens[:n_t]
 
 
-def make_lm_objective(cfg, eval_rows: int = 64):
+def make_lm_objective(cfg, eval_rows: int = 64, *, impl: str = "xla"):
     """loss(params, token block) on a fixed-size probe of the block.
 
     The probe is always ``eval_rows`` rows rotating through the block's
@@ -70,11 +70,14 @@ def make_lm_objective(cfg, eval_rows: int = 64):
     fixed-capacity MaskedWindow compute the identical batch — windows
     smaller than the probe wrap instead of shrinking it, keeping the
     two-track condition (3) comparison at a constant sample size and the
-    two data paths bit-exact against each other."""
+    two data paths bit-exact against each other.  ``impl`` picks the layer
+    implementation (``"pallas"`` routes scan/attention blocks through the
+    kernels), matching the train step so the probe measures the same
+    function the optimizer descends."""
     def objective(params, toks):
         # host-path slices, MaskedWindows, and multi-host stage windows all
         # probe through the one lane-aware gather (an equal per-lane share)
         probe = probe_rows(toks, eval_rows)
         batch = {"tokens": probe[:, :-1], "labels": probe[:, 1:]}
-        return T.loss_fn(cfg, params, batch)[0]
+        return T.loss_fn(cfg, params, batch, impl=impl)[0]
     return objective

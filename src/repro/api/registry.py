@@ -8,6 +8,7 @@ touching this module (a new workload becomes a spec, not a driver).
 from __future__ import annotations
 
 import dataclasses
+import difflib
 from typing import Any, Callable
 
 from ..core.engine import (ComposedPolicy, ExpansionPolicy, FixedSteps,
@@ -35,8 +36,12 @@ class Registry:
         try:
             return self._entries[name]
         except KeyError:
+            close = difflib.get_close_matches(str(name), self._entries,
+                                              n=3, cutoff=0.5)
+            hint = f" did you mean {', '.join(map(repr, close))}?" \
+                if close else ""
             raise SpecError(
-                f"unknown {self.kind} {name!r}; registered names: "
+                f"unknown {self.kind} {name!r};{hint} registered names: "
                 f"{sorted(self._entries)}") from None
 
     def names(self) -> list[str]:
@@ -80,6 +85,12 @@ TOPOLOGIES = Registry("topology", {
     "process": ProcessTopology,
 })
 
+# ---------------------------------------------------------------- workloads
+# name -> zero-arg RunSpec factory (thunks, not specs: presets with
+# filesystem knobs resolve them at request time).  Populated by
+# repro.workloads.presets on import; session.run()/the CLI pull from here.
+WORKLOADS = Registry("workload")
+
 
 def register_policy(name: str, cls) -> Any:
     return POLICIES.register(name, cls)
@@ -91,6 +102,10 @@ def register_optimizer(name: str, cls) -> Any:
 
 def register_store(name: str, cls) -> Any:
     return STORES.register(name, cls)
+
+
+def register_workload(name: str, preset) -> Any:
+    return WORKLOADS.register(name, preset)
 
 
 # ----------------------------------------------------------------- builders

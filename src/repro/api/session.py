@@ -129,11 +129,22 @@ def _validate(spec: RunSpec) -> None:
             raise SpecError(f"{LM_OPTIMIZER!r} accepts params 'lr' and "
                             f"'batch_size', not {sorted(bad)}")
         try:
-            configs.get(spec.model.arch)
+            cfg = configs.get(spec.model.arch)
         except Exception:
             raise SpecError(
                 f"unknown arch {spec.model.arch!r}; available: "
                 f"{sorted(configs.ALIASES)}") from None
+        if spec.model.reduced:
+            cfg = configs.reduced(cfg)
+        if spec.model.overrides:
+            try:
+                cfg = cfg.with_(**spec.model.overrides)
+            except TypeError as e:
+                raise SpecError(f"ModelSpec.overrides: {e}") from None
+        # family adapter resolution is itself an eager check: an explicit
+        # family that contradicts the arch fails here, not in the train step
+        from ..workloads.families import resolve_family
+        resolve_family(spec.model, cfg)
     elif spec.optimizer.name == LM_OPTIMIZER:
         raise SpecError(f"{LM_OPTIMIZER!r} is the LM train step; a convex "
                         f"run needs a batch optimizer "
@@ -303,12 +314,14 @@ def _build_convex(spec: RunSpec, policy) -> "Session":
 
 
 def _build_lm(spec: RunSpec, policy) -> "Session":
+    from ..workloads.families import resolve_family
     data, model = spec.data, spec.model
     cfg = configs.get(model.arch)
     if model.reduced:
         cfg = configs.reduced(cfg)
     if model.overrides:
         cfg = cfg.with_(**model.overrides)
+    family = resolve_family(model, cfg)
     mesh = make_host_mesh()
     hosts = spec.topology.hosts
     n0 = spec.schedule.n0
@@ -355,16 +368,17 @@ def _build_lm(spec: RunSpec, policy) -> "Session":
             prefetch_workers=data.prefetch_workers)
     else:
         dataset = TokenWindows(jnp.asarray(corpus))
-    params = T.init_params(cfg, jax.random.key(data.seed))
+    # the family adapter supplies params / train step / probe objective —
+    # transformer keeps the seed XLA layers (bit-compatible with PRs 1-7);
+    # mamba and rglru route the same trio through the Pallas scan kernels
+    params = family.build_params(cfg, jax.random.key(data.seed))
     lr = float(spec.optimizer.params.get("lr", 1e-3))
     batch_size = int(spec.optimizer.params.get("batch_size", 8))
-    optimizer = LMStepOptimizer(
-        train_step=steps.make_train_step(cfg, lr=lr),
-        init_opt=steps.init_opt_state, batch_size=batch_size)
+    optimizer = family.step(cfg, lr=lr, batch_size=batch_size)
     # clamp the probe to the eval set so a small eval block is an unweighted
     # mean over distinct rows; stage windows below that size wrap instead,
     # identically on both data paths
-    objective = make_lm_objective(cfg, min(data.eval_rows, len(eval_np)))
+    objective = family.objective(cfg, min(data.eval_rows, len(eval_np)))
     engine = _make_engine(spec, elastic=elastic,
                           step_cost=_step_cost(spec, optimizer))
     return Session(spec, dataset=dataset, optimizer=optimizer,
@@ -437,6 +451,31 @@ def resume_session(directory) -> "Session":
     spec = spec.replace(checkpoint=spec.checkpoint.replace(
         directory=str(d), resume=True))
     return build(spec)
+
+
+# ------------------------------------------------------------------ workloads
+def run(workload: "str | RunSpec", *, progress: Callable | None = None,
+        probe: Callable | None = None):
+    """One string, one run: ``repro.api.run("falcon-mamba@stream")``.
+
+    ``workload`` is a preset name from the ``WORKLOADS`` registry (or any
+    ``arch@scenario`` string the workload grammar parses — see
+    ``repro.workloads``), or an explicit :class:`RunSpec`.  Offline specs
+    build a :class:`Session`, execute it, and return the session with its
+    ``trace`` populated; serve-enabled specs route through
+    ``repro.serve.build_loop`` and return the finished
+    ``ServeTrainLoop`` (its report under ``.report``)."""
+    if isinstance(workload, str):
+        from ..workloads import get_workload
+        workload = get_workload(workload).spec()
+    if workload.serve.enabled:
+        from ..serve import build_loop
+        loop = build_loop(workload)
+        loop.run()
+        return loop
+    session = build(workload)
+    session.run(progress=progress, probe=probe)
+    return session
 
 
 # -------------------------------------------------------------------- session

@@ -273,10 +273,16 @@ class ObsSpec(_Spec):
 class ModelSpec(_Spec):
     """The LM architecture (configs registry name).  ``reduced`` builds
     the <=2-layer CPU smoke variant; ``overrides`` are ``ModelConfig``
-    field overrides applied on top (e.g. a ~100M-param family member)."""
+    field overrides applied on top (e.g. a ~100M-param family member).
+    ``family`` names the workload family adapter
+    (``repro.workloads.FAMILIES``: transformer | mamba | rglru | moe) that
+    supplies the train step / objective / param factories; ``"auto"``
+    derives it from the architecture.  An explicit family that contradicts
+    the arch fails eagerly at ``build()``."""
     arch: str = "qwen3-0.6b"
     reduced: bool = True
     overrides: dict = dataclasses.field(default_factory=dict)
+    family: str = "auto"
 
     def __post_init__(self):
         _set(self, overrides=dict(self.overrides))

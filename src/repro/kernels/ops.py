@@ -3,18 +3,38 @@
 
 ``interpret=True`` everywhere in this container (CPU validation); on real
 TPU hardware set ``repro.kernels.ops.INTERPRET = False``.
+
+The scan kernels (``ssm_scan``/``rglru_scan``) and ``flash_attention``
+are differentiable: the Pallas kernel is the forward pass and the backward
+is the VJP of the matching ``kernels.ref`` oracle recomputed from the
+saved primal inputs — so the training path can route through the kernels
+(``impl="pallas"`` end to end) without hand-written backward kernels.
+
+``CALLS`` counts trace-time dispatches per kernel (reset with
+``reset_calls``): the workload sweep uses it to prove a family's training
+traffic actually routed through its kernel rather than the XLA fallback.
 """
 from __future__ import annotations
+
+import collections
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import linear_grad as _lg
+from . import ref as _ref
 from . import rglru_scan as _rg
 from . import ssm_scan as _ss
 
 INTERPRET = True
+
+CALLS: collections.Counter = collections.Counter()
+
+
+def reset_calls() -> None:
+    CALLS.clear()
 
 
 def linear_forward(X, w):
@@ -42,10 +62,35 @@ def linear_value_grad(X, y, w, *, loss: str = "squared_hinge",
     return L, g
 
 
+# -------------------------------------------------------- flash attention
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fa_diff(qT, kT, vT, causal, window, bq, bk):
+    return _fa.flash_attention(qT, kT, vT, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=INTERPRET)
+
+
+def _fa_fwd(qT, kT, vT, causal, window, bq, bk):
+    return _fa_diff(qT, kT, vT, causal, window, bq, bk), (qT, kT, vT)
+
+
+def _fa_bwd(causal, window, bq, bk, res, g):
+    # padded rows/columns are safe: the caller slices padded outputs away,
+    # so their cotangent is zero, and causal masking keeps padded keys out
+    # of every real query's softmax
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.flash_attention(q, k, v, causal=causal,
+                                             window=window), *res)
+    return vjp(g)
+
+
+_fa_diff.defvjp(_fa_fwd, _fa_bwd)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128):
     """q: (B, S, H, hd); k, v: (B, S, KV, hd) — model layout (seq-major).
     Expands GQA KV heads and pads S to block multiples."""
+    CALLS["flash_attention"] += 1
     B, S, H, hd = q.shape
     KV = k.shape[2]
     if KV != H:
@@ -61,21 +106,59 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         qT = jnp.pad(qT, ((0, 0), (0, 0), (0, pad), (0, 0)))
         kT = jnp.pad(kT, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vT = jnp.pad(vT, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    out = _fa.flash_attention(qT, kT, vT, causal=causal, window=window,
-                              block_q=bq, block_k=bk, interpret=INTERPRET)
+    out = _fa_diff(qT, kT, vT, causal, window, bq, bk)
     if pad:
         out = out[:, :, :S]
     return jnp.swapaxes(out, 1, 2)      # back to (B, S, H, hd)
 
 
-def ssm_scan(u, delta, B_ssm, C_ssm, A_log, D, *, block_d: int = 256):
-    di = u.shape[-1]
-    bd = min(block_d, di)
-    while di % bd:
-        bd -= 1
+# --------------------------------------------------------------- ssm scan
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _ssm_diff(u, delta, B_ssm, C_ssm, A_log, D, bd):
     return _ss.ssm_scan(u, delta, B_ssm, C_ssm, A_log, D, block_d=bd,
                         interpret=INTERPRET)
 
 
+def _ssm_fwd(u, delta, B_ssm, C_ssm, A_log, D, bd):
+    y = _ssm_diff(u, delta, B_ssm, C_ssm, A_log, D, bd)
+    return y, (u, delta, B_ssm, C_ssm, A_log, D)
+
+
+def _ssm_bwd(bd, res, g):
+    _, vjp = jax.vjp(_ref.ssm_scan, *res)
+    return vjp(g)
+
+
+_ssm_diff.defvjp(_ssm_fwd, _ssm_bwd)
+
+
+def ssm_scan(u, delta, B_ssm, C_ssm, A_log, D, *, block_d: int = 256):
+    CALLS["ssm_scan"] += 1
+    di = u.shape[-1]
+    bd = min(block_d, di)
+    while di % bd:
+        bd -= 1
+    return _ssm_diff(u, delta, B_ssm, C_ssm, A_log, D, bd)
+
+
+# ------------------------------------------------------------- rglru scan
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rglru_diff(a, b, bw):
+    return _rg.rglru_scan(a, b, block_w=bw, interpret=INTERPRET)
+
+
+def _rglru_fwd(a, b, bw):
+    return _rglru_diff(a, b, bw), (a, b)
+
+
+def _rglru_bwd(bw, res, g):
+    _, vjp = jax.vjp(_ref.rglru_scan, *res)
+    return vjp(g)
+
+
+_rglru_diff.defvjp(_rglru_fwd, _rglru_bwd)
+
+
 def rglru_scan(a, b, *, block_w: int = 256):
-    return _rg.rglru_scan(a, b, block_w=block_w, interpret=INTERPRET)
+    CALLS["rglru_scan"] += 1
+    return _rglru_diff(a, b, min(block_w, a.shape[-1]))

@@ -146,8 +146,44 @@ def train_lm(cfg, tc: TrainConfig, *, clock=None, progress=None) -> Trace:
         progress=progress)
 
 
+def _run_workload(name: str, *, dry_run: bool) -> None:
+    from ..workloads import get_workload
+    from ..api import run as run_workload
+    spec = get_workload(name).spec()
+    if dry_run:
+        print(spec.to_json())
+        if not spec.serve.enabled:
+            with build(spec) as session:
+                for info in session.stage_plan():
+                    print(f"stage {info.stage}: window {info.n_t}"
+                          f"{' (final)' if info.is_final else ''}")
+        return
+    t0 = time.time()
+    result = run_workload(name)
+    trace = result.trace
+    stages = trace.meta.get("stages") if trace is not None else None
+    print(f"workload {name!r} done in {time.time()-t0:.1f}s wall; "
+          f"{stages} stages, "
+          f"{trace.meta.get('host_transfers')} host transfers")
+
+
+def _list_workloads() -> None:
+    from ..workloads import PRESETS, describe
+    width = max(len(p.name) for p in PRESETS)
+    for p in PRESETS:
+        print(f"{p.name:<{width}}  {describe(p.name)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", type=str, default=None, metavar="NAME",
+                    help="run a workload preset ('arch@scenario', see "
+                         "--list-workloads) instead of composing a run "
+                         "from the per-component flags below; mutually "
+                         "exclusive with them")
+    ap.add_argument("--list-workloads", action="store_true",
+                    help="print the workload matrix (name + one-line "
+                         "scenario description) and exit")
     ap.add_argument("--arch", type=str, default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--schedule", type=str, default="bet",
@@ -181,6 +217,34 @@ def main() -> None:
                     help="print the composed RunSpec (JSON) and the stage "
                          "plan, then exit without running")
     args = ap.parse_args()
+
+    if args.list_workloads:
+        _list_workloads()
+        return
+    if args.workload is not None:
+        # --workload IS the run description: per-component flags would
+        # silently fight the preset, so their non-default use is an error
+        component_flags = {
+            "--arch": args.arch != "qwen3-0.6b",
+            "--schedule": args.schedule != "bet",
+            "--inner-steps": args.inner_steps != 8,
+            "--final-steps": args.final_steps != 16,
+            "--batch-size": args.batch_size != 8,
+            "--seq-len": args.seq_len != 128,
+            "--n0": args.n0 != 64,
+            "--corpus": args.corpus != 1024,
+            "--hosts": args.hosts != 1,
+            "--ckpt-dir": args.ckpt_dir is not None,
+            "--resume": args.resume,
+            "--kill-host-at": args.kill_host_at is not None,
+            "--straggler-deadline": args.straggler_deadline is not None,
+        }
+        used = sorted(k for k, v in component_flags.items() if v)
+        if used:
+            ap.error(f"--workload composes the whole run; drop {used} "
+                     f"(scenario tokens cover them)")
+        _run_workload(args.workload, dry_run=args.dry_run)
+        return
 
     cfg = configs.get(args.arch)
     if args.reduced:

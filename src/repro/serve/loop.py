@@ -15,8 +15,9 @@ The loop is described by an ordinary :class:`~repro.api.RunSpec` with
 ``serve.enabled=True`` — ``build_loop(spec)`` is the front door
 (``repro.api.build`` refuses serve specs and points here).  The training
 stack is composed from the same pieces a Session uses: StreamingDataset
-(masked plane), LMStepOptimizer, make_lm_objective, build_policy,
-StageCheckpointer, BetEngine — only the corpus and the stage loop differ
+(masked plane), the workload family adapter's step/objective factories
+(``repro.workloads.families``), build_policy, StageCheckpointer,
+BetEngine — only the corpus and the stage loop differ
 (``BetEngine.run_online``)."""
 from __future__ import annotations
 
@@ -29,15 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from .. import configs
-from ..api.lm import LMStepOptimizer, make_lm_objective
 from ..api.registry import LM_OPTIMIZER, build_policy
 from ..api.specs import RunSpec, SpecError
 from ..core.engine import BETSchedule, BetEngine
 from ..core.timemodel import SimulatedClock
 from ..data.plane import StreamingDataset
 from ..elastic import StageCheckpointer
-from ..launch import steps
-from ..models import transformer as T
 from ..obs import EventRecorder, RunReport
 from ..obs.metrics import attach_clock, attach_dataset, attach_server
 from .ingest import OnlineShardStore
@@ -135,7 +133,13 @@ class ServeTrainLoop:
             raise SpecError(f"{m.arch} is not a token-mode arch; the serve "
                             f"loop decodes tokens")
         self.cfg = cfg
-        self.params0 = T.init_params(cfg, jax.random.key(d.seed))
+        # the family adapter supplies params + train step + objective —
+        # the serve loop trains exactly what an offline session would
+        # (kernel-routed for mamba/rglru); lazy import: workloads pulls
+        # repro.api, which registers this module's TrafficDriven
+        from ..workloads.families import resolve_family
+        self.family = resolve_family(m, cfg)
+        self.params0 = self.family.build_params(cfg, jax.random.key(d.seed))
         self.store = OnlineShardStore(
             (d.seq_len + 1,), np.int32, shard_size=d.shard_size,
             capacity=self.capacity)
@@ -223,11 +227,10 @@ class ServeTrainLoop:
                                    prefetch_workers=d.prefetch_workers)
         lr = float(spec.optimizer.params.get("lr", 1e-3))
         batch_size = int(spec.optimizer.params.get("batch_size", 8))
-        optimizer = LMStepOptimizer(
-            train_step=steps.make_train_step(self.cfg, lr=lr),
-            init_opt=steps.init_opt_state, batch_size=batch_size)
-        objective = make_lm_objective(self.cfg,
-                                      int(eval_tokens.shape[0]))
+        optimizer = self.family.step(self.cfg, lr=lr,
+                                     batch_size=batch_size)
+        objective = self.family.objective(self.cfg,
+                                          int(eval_tokens.shape[0]))
         policy = build_policy(spec.policy)
         wired = _attach_traffic(policy, self.store, self.tick)
         if not wired:

@@ -1,0 +1,19 @@
+# The workloads subsystem (ISSUE 8 / ROADMAP item 5): one string names a
+# full run over the whole model zoo.  Family adapters generalize the LM
+# path to mamba/rglru/moe (the scan kernels carry the training traffic),
+# the preset grammar composes scenarios (stages/hosts/elastic/stream/
+# serve/obs) into RunSpecs, and the sweep driver smoke-runs the matrix
+# with per-preset RunReport claims.
+from .families import (FAMILIES, LMFamily, ModelFamily, family_of_config,
+                       resolve_family)
+from .presets import (PRESETS, SHORT, WorkloadPreset, describe,
+                      get_workload, parse, workload_spec)
+from .sweep import SweepResult, run_preset, sweep
+
+__all__ = [
+    "FAMILIES", "LMFamily", "ModelFamily", "family_of_config",
+    "resolve_family",
+    "PRESETS", "SHORT", "WorkloadPreset", "describe", "get_workload",
+    "parse", "workload_spec",
+    "SweepResult", "run_preset", "sweep",
+]

@@ -1,0 +1,128 @@
+"""Model-family adapters — the LM path generalized over the model zoo.
+
+``api/lm.py`` wired exactly one workload: the transformer train step
+(``LMStepOptimizer``) and probe objective.  A :class:`ModelFamily` is that
+same trio of factories — ``build_params`` / ``step`` / ``objective`` —
+made per-family, so the session builder composes *any* architecture in
+``repro.configs`` through one code path:
+
+- ``transformer`` — dense/VLM/audio attention stacks (XLA layers, the
+  seed path, bit-compatible with PRs 1-7);
+- ``mamba`` — selective-SSM stacks routed through the Pallas scan kernel
+  (``kernels/ssm_scan.py`` via ``models.mamba.mamba_block(impl="pallas")``);
+- ``rglru`` — RG-LRU/recurrentgemma hybrid stacks routed through
+  ``kernels/rglru_scan.py`` (``models.rglru.rg_lru(impl="pallas")``);
+- ``moe`` — mixture-of-experts stacks (XLA grouped experts).
+
+The kernel-routed families are differentiable end to end because
+``kernels/ops.py`` wraps each Pallas kernel in a ``custom_vjp`` (forward =
+kernel, backward = VJP of the ``kernels/ref.py`` oracle); ``ops.CALLS``
+counts trace-time dispatches so a sweep can *prove* the traffic went
+through the kernel rather than the XLA fallback.
+
+``ModelSpec.family`` selects an adapter by name (``"auto"`` derives it
+from the architecture's ``ModelConfig.family``); ``resolve_family``
+validates the pairing eagerly, so a contradictory spec fails at
+``build()`` with a :class:`~repro.api.specs.SpecError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+from ..launch import steps
+from ..models import transformer as T
+from ..models.common import ModelConfig
+from .. import configs
+from ..api.lm import LMStepOptimizer, make_lm_objective
+from ..api.specs import ModelSpec, SpecError
+
+
+@runtime_checkable
+class ModelFamily(Protocol):
+    """What the session builder needs from a workload family: parameter
+    init, a ``BatchOptimizer`` wrapping the family's train step, and the
+    probe objective — all from the same ``ModelConfig``."""
+    name: str
+    impl: str                       # layer implementation: "xla" | "pallas"
+    kernels: tuple                  # ops.CALLS keys training routes through
+
+    def build_params(self, cfg: ModelConfig, key): ...
+    def step(self, cfg: ModelConfig, *, lr: float,
+             batch_size: int) -> LMStepOptimizer: ...
+    def objective(self, cfg: ModelConfig, eval_rows: int): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class LMFamily:
+    """The concrete adapter: every zoo architecture shares the scanned
+    assembly in ``models/transformer.py``, so families differ only in
+    which config families they accept and which layer ``impl`` carries
+    the training traffic (and therefore which kernels light up)."""
+    name: str
+    config_families: tuple          # accepted ModelConfig.family values
+    impl: str = "xla"
+    kernels: tuple = ()
+
+    def build_params(self, cfg: ModelConfig, key):
+        return T.init_params(cfg, key)
+
+    def step(self, cfg: ModelConfig, *, lr: float,
+             batch_size: int) -> LMStepOptimizer:
+        return LMStepOptimizer(
+            train_step=steps.make_train_step(cfg, lr=lr, impl=self.impl),
+            init_opt=steps.init_opt_state, batch_size=batch_size)
+
+    def objective(self, cfg: ModelConfig, eval_rows: int):
+        return make_lm_objective(cfg, eval_rows, impl=self.impl)
+
+
+FAMILIES: dict[str, LMFamily] = {
+    "transformer": LMFamily("transformer",
+                            config_families=("dense", "vlm", "audio")),
+    "mamba": LMFamily("mamba", config_families=("ssm",), impl="pallas",
+                      kernels=("ssm_scan",)),
+    "rglru": LMFamily("rglru", config_families=("hybrid",), impl="pallas",
+                      kernels=("rglru_scan", "flash_attention")),
+    "moe": LMFamily("moe", config_families=("moe",)),
+}
+
+# ModelConfig.family -> adapter name (the "auto" derivation)
+_AUTO = {cf: fam.name for fam in FAMILIES.values()
+         for cf in fam.config_families}
+
+
+def family_of_config(cfg: ModelConfig) -> str:
+    """The adapter name an architecture derives to under ``family="auto"``."""
+    try:
+        return _AUTO[cfg.family]
+    except KeyError:
+        raise SpecError(
+            f"architecture {cfg.name!r} has config family {cfg.family!r} "
+            f"with no workload adapter; adapters cover "
+            f"{sorted(_AUTO)}") from None
+
+
+def resolve_family(model: ModelSpec, cfg: ModelConfig | None = None
+                   ) -> LMFamily:
+    """``ModelSpec`` -> family adapter, validated against the arch.
+
+    ``family="auto"`` derives the adapter from the architecture; an
+    explicit name must both exist and accept the architecture's config
+    family — mismatches fail here, eagerly, not as a shape error inside
+    the train step."""
+    cfg = configs.get(model.arch) if cfg is None else cfg
+    if model.family == "auto":
+        return FAMILIES[family_of_config(cfg)]
+    if model.family not in FAMILIES:
+        raise SpecError(
+            f"unknown model family {model.family!r}; available: "
+            f"{sorted(FAMILIES)} (or 'auto')")
+    fam = FAMILIES[model.family]
+    if cfg.family not in fam.config_families:
+        raise SpecError(
+            f"family {fam.name!r} cannot adapt arch {model.arch!r} "
+            f"(config family {cfg.family!r}, accepted: "
+            f"{sorted(fam.config_families)}); use family='auto' or "
+            f"{family_of_config(cfg)!r}")
+    return fam

@@ -307,3 +307,62 @@ def test_dry_run_prints_spec(capsys):
         sys.argv = argv
     out = capsys.readouterr().out
     assert '"kind": "lm"' in out and "stage 0: window 16" in out
+
+
+# --------------------------------------------------------------- workloads
+# satellite coverage for the workloads subsystem: every registered preset
+# survives the JSON round trip, composes through build() (or build_loop
+# for serve cells), and its checkpoints feed the normal resume path.
+
+def test_every_workload_preset_roundtrips_losslessly():
+    from repro.workloads import PRESETS
+    for preset in PRESETS:
+        spec = preset.spec()
+        assert RunSpec.from_json(spec.to_json()) == spec
+
+
+def test_every_offline_workload_preset_builds():
+    from repro.workloads import PRESETS
+    for preset in PRESETS:
+        spec = preset.spec()
+        if spec.serve.enabled:
+            continue
+        sess = build(spec)          # eager validation + full composition
+        assert sess.stage_plan()[-1].n_t == spec.data.corpus_size
+
+
+def test_serve_workload_preset_refused_by_build_taken_by_build_loop(
+        tmp_path):
+    from repro.serve import build_loop
+    from repro.workloads import workload_spec
+    spec = workload_spec("recurrentgemma@serve")
+    with pytest.raises(SpecError, match="build_loop"):
+        build(spec)
+    loop = build_loop(spec.replace(checkpoint=CheckpointSpec(
+        directory=str(tmp_path), keep=2)))
+    assert loop.family.name == "rglru"
+
+
+def test_workload_preset_checkpoint_resumes(tmp_path):
+    from repro.api import resume_session
+    from repro.workloads import workload_spec
+    spec = workload_spec("qwen3@2stages").replace(
+        checkpoint=CheckpointSpec(directory=str(tmp_path)))
+
+    class _Killed(Exception):
+        pass
+
+    sess = build(spec)
+
+    def die(end):
+        if end.info.stage == 1:
+            raise _Killed
+
+    sess.on_stage(die)
+    with pytest.raises(_Killed):
+        sess.run()
+
+    resumed = resume_session(tmp_path)
+    tr = resumed.run()
+    assert resumed.restored.meta["spec"] == spec.to_dict()
+    assert tr.meta["stages"] + len(resumed.restored.trace_points()) >= 2

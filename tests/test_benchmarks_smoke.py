@@ -24,11 +24,11 @@ def test_bench_smoke_asserts_every_json_anchor():
                       for p in REPO_ROOT.glob("BENCH_*.json")}
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.run", "--smoke"],
-        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=540)
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, (out.stdout[-4000:], out.stderr[-4000:])
     # every bench_* module ran and asserted its claims
     for name in ("bench_engine", "bench_data", "bench_dist",
-                 "bench_elastic"):
+                 "bench_elastic", "bench_workloads"):
         assert f"{name}/__wall__" in out.stdout, out.stdout[-4000:]
         assert f"{name}/__wall__" not in [
             l for l in out.stdout.splitlines() if l.endswith("FAILED")]
@@ -39,7 +39,7 @@ def test_bench_smoke_asserts_every_json_anchor():
     assert m, out.stdout[-2000:]
     smoke_dir = pathlib.Path(m.group(1))
     assert smoke_dir != REPO_ROOT
-    for name in ("engine", "data", "dist", "elastic"):
+    for name in ("engine", "data", "dist", "elastic", "workloads"):
         report = json.loads((smoke_dir / f"BENCH_{name}.json").read_text())
         claims = report["claims"]
         assert claims and all(claims.values()), (name, claims)
@@ -55,3 +55,13 @@ def test_bench_smoke_asserts_every_json_anchor():
     event_report = json.loads((obs / "report.json").read_text())
     assert event_report["claims"]["overlap_ge_half"] is True
     assert (obs / "report.txt").read_text().strip()
+    # the workload matrix leaves one obs trail per preset (sweep forces
+    # the telemetry plane on); every event log must be schema-valid
+    preset_dirs = sorted((smoke_dir / "obs_workloads").iterdir())
+    assert len(preset_dirs) >= 8, preset_dirs
+    logs = [d / "obs" / "events.jsonl" for d in preset_dirs
+            if (d / "obs" / "events.jsonl").exists()]
+    assert logs, preset_dirs                    # plane-backed cells log
+    for log in logs:
+        events = from_jsonl(log)
+        assert events and validate_events(events) == [], log

@@ -1,0 +1,165 @@
+"""The workloads subsystem (tier1): the ``arch@scenario`` grammar, family
+resolution from ModelConfig to adapter, preset registry did-you-mean
+errors, and one end-to-end ``repro.api.run`` over a pallas-kernel family
+proving the training traffic routes through the kernel."""
+from __future__ import annotations
+
+import pytest
+
+from repro import configs
+from repro.api import WORKLOADS, SpecError, build
+from repro.kernels import ops
+from repro.workloads import (FAMILIES, PRESETS, SHORT, describe,
+                             family_of_config, get_workload, parse,
+                             resolve_family, workload_spec)
+from repro.api.specs import ModelSpec
+
+pytestmark = pytest.mark.tier1
+
+
+# ----------------------------------------------------------------- grammar
+def test_parse_expands_short_arch_names():
+    arch, tokens = parse("qwen3@2stages")
+    assert arch == "qwen3-0.6b"
+    assert tokens == ["2stages"]
+    arch, tokens = parse("granite-moe@4hosts-elastic")
+    assert arch == "granite-moe-1b-a400m"
+    assert tokens == ["4hosts", "elastic"]
+
+
+def test_parse_accepts_full_alias():
+    arch, _ = parse("falcon-mamba-7b@2stages")
+    assert arch == "falcon-mamba-7b"
+
+
+def test_parse_rejects_missing_at():
+    with pytest.raises(SpecError, match="arch@scenario"):
+        parse("qwen3")
+
+
+def test_parse_unknown_arch_suggests():
+    with pytest.raises(SpecError, match="did you mean.*qwen3"):
+        parse("qwne3@2stages")
+
+
+def test_parse_unknown_token_suggests():
+    with pytest.raises(SpecError, match="did you mean.*'stream'"):
+        parse("qwen3@straem")
+
+
+def test_parse_empty_scenario():
+    with pytest.raises(SpecError, match="empty scenario"):
+        parse("qwen3@")
+
+
+def test_describe_mentions_family_and_tokens():
+    d = describe("recurrentgemma@serve")
+    assert "rglru" in d and "serve-while-you-train" in d
+
+
+# ---------------------------------------------------------- spec composing
+def test_workload_spec_stage_corpus_arithmetic():
+    spec = workload_spec("qwen3@3stages")
+    # n0=8, growth=2 -> 3 stages needs corpus 32
+    assert spec.data.corpus_size == 32
+    assert spec.schedule.n0 == 8
+
+
+def test_workload_spec_stream_runs_three_stages():
+    # stage 0's loads can't overlap anything; stream forces >=3 stages so
+    # the overlap claim measures the plane, not the cold start
+    spec = workload_spec("stablelm@stream")
+    assert spec.data.corpus_size == 32
+    assert spec.data.delay_ms > 0
+    assert spec.data.plane == "plane"
+
+
+def test_workload_spec_one_stage_rejected():
+    with pytest.raises(SpecError, match="below the 2-stage minimum"):
+        workload_spec("qwen3@1stages")
+
+
+def test_workload_spec_elastic_needs_hosts():
+    with pytest.raises(SpecError, match="'elastic'.*hosts"):
+        workload_spec("qwen3@elastic")
+
+
+def test_workload_spec_serve_excludes_hosts():
+    with pytest.raises(SpecError, match="single-host"):
+        workload_spec("recurrentgemma@2hosts-serve")
+
+
+def test_workload_spec_serve_defaults_checkpoint():
+    spec = workload_spec("recurrentgemma@serve")
+    assert spec.serve.enabled
+    assert spec.checkpoint.directory
+    assert spec.policy.name == "traffic_driven"
+
+
+# ------------------------------------------------------- family resolution
+def test_every_config_family_maps_to_adapter():
+    for alias in SHORT.values():
+        cfg = configs.get(alias)
+        fam = FAMILIES[family_of_config(cfg)]
+        assert cfg.family in fam.config_families
+
+
+def test_resolve_family_auto_and_explicit():
+    cfg = configs.get("falcon-mamba-7b")
+    fam = resolve_family(ModelSpec(arch="falcon-mamba-7b"), cfg)
+    assert fam.name == "mamba" and fam.impl == "pallas"
+    assert "ssm_scan" in fam.kernels
+    explicit = resolve_family(
+        ModelSpec(arch="falcon-mamba-7b", family="mamba"), cfg)
+    assert explicit is fam
+
+
+def test_resolve_family_mismatch_is_eager_spec_error():
+    cfg = configs.get("falcon-mamba-7b")
+    with pytest.raises(SpecError, match="family"):
+        resolve_family(ModelSpec(arch="falcon-mamba-7b",
+                                 family="transformer"), cfg)
+
+
+def test_build_validates_family_eagerly():
+    spec = workload_spec("qwen3@2stages")
+    bad = spec.replace(model=spec.model.replace(family="mamba"))
+    with pytest.raises(SpecError, match="family"):
+        build(bad)
+
+
+# ---------------------------------------------------------------- registry
+def test_registered_presets_cover_all_families():
+    assert {p.family for p in PRESETS} == set(FAMILIES)
+    assert len(PRESETS) >= 8
+
+
+def test_workloads_registry_did_you_mean():
+    with pytest.raises(SpecError, match="did you mean 'qwen3@2stages'"):
+        WORKLOADS.get("qwen3@2stage")
+
+
+def test_get_workload_grammar_fallback():
+    # unregistered-but-parseable strings become ad-hoc presets
+    p = get_workload("yi@2stages")
+    assert p.arch == "yi-9b" and p.family == "transformer"
+    spec = p.spec()
+    assert spec.meta["workload"] == "yi@2stages"
+
+
+def test_get_workload_rejects_garbage_with_suggestions():
+    with pytest.raises(SpecError, match="registered"):
+        get_workload("not-a-workload")
+
+
+# ------------------------------------------------------------- end to end
+def test_run_mamba_preset_routes_through_ssm_kernel():
+    import repro.api as api
+    ops.reset_calls()
+    session = api.run("falcon-mamba@2stages")
+    assert session.trace.meta["stages"] >= 2
+    assert ops.CALLS["ssm_scan"] > 0      # pallas path, not XLA fallback
+    tr = session.trace
+    last = [p.f_full or p.f_window for p in tr.points if p.f_full is not None
+            or p.f_window is not None][-1]
+    assert last == last                    # finite, not NaN
