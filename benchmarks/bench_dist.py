@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import tempfile
 import time
 
@@ -91,6 +92,11 @@ def main() -> None:
 
     ds, obj, w0, _ = common.setup(args.dataset, scale=args.scale, lam=LAM)
     n0 = max(128, min(ds.d, ds.n // 8))
+    # fleet observability rides along: one event lane per simulated host,
+    # merged at the stage-flush barriers, with the live health detectors
+    # tapping every lane (CI archives the smoke run's obs_fleet/)
+    obs_dir = os.path.join(os.path.dirname(os.path.abspath(args.out)),
+                           "obs_fleet") if args.out else None
     policy = PolicySpec("fixed_steps", {"inner_steps": 5, "final_steps": 25})
     # hessian_fraction=1.0: the subsample is the identity on both layouts,
     # so the only distributed/single-host difference is psum reassociation
@@ -111,7 +117,9 @@ def main() -> None:
                 shard_size=args.shard_size, delay_ms=args.delay_ms),
             policy=policy, optimizer=opt_spec,
             schedule=ScheduleSpec(n0=n0),
-            topology=TopologySpec(hosts=args.hosts)))
+            topology=TopologySpec(hosts=args.hosts),
+            obs={"enabled": True, "fleet": True, "health": True,
+                 "dir": obs_dir, "chrome_trace": True} if obs_dir else {}))
         dd = session.dataset
         topology = dd.topology
         t0 = time.perf_counter()
@@ -123,6 +131,8 @@ def main() -> None:
                  for h in range(args.hosts)]
         global_meter = dd.meter.snapshot()
         sx, sy = dd.stores
+        fleet_summary = session.fleet_trace().summary() if obs_dir else None
+        health = session.health_report().to_dict() if obs_dir else None
 
     fw_h = np.asarray(tr_host.column("f_window"))
     fw_d = np.asarray(tr_dist.column("f_window"))
@@ -154,6 +164,8 @@ def main() -> None:
         "engine_stages": tr_dist.meta["stages"],
         "trajectory_max_rel_dev": rel_dev,
         "parity_tolerance": {"rel": REL_TOL, "reason": PARITY_REASON},
+        "fleet": fleet_summary,
+        "health": health,
         "claims": {
             "per_host_loads_are_owned_slice_only":
                 per_host_loaded == owned,

@@ -23,6 +23,11 @@ from repro.optim import Adagrad, NewtonCG
 
 ROWS: list[str] = []
 
+# every check_claims call logs its verdicts here (pass or fail, with the
+# failure details); benchmarks/run.py folds them into the BENCH_history
+# record for the module that just ran
+CLAIMS_LOG: list[dict] = []
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
@@ -141,9 +146,13 @@ def check_claims(module: str, claims: dict, details: dict | None = None) -> None
     claim before the harness-visible RuntimeError, so a FAILED row in CI
     carries the numbers, not just the claim names."""
     failed = [k for k, v in claims.items() if not v]
+    details = details or {}
+    CLAIMS_LOG.append({
+        "module": module,
+        "claims": {k: bool(v) for k, v in claims.items()},
+        "failed": {k: str(details.get(k, "")) for k in failed}})
     if not failed:
         return
-    details = details or {}
     for k in failed:
         print(f"CLAIM FAILED {module}/{k}: "
               f"{details.get(k, 'observed falsy, no detail recorded')}",

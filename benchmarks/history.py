@@ -1,0 +1,58 @@
+"""Append-only BENCH history: one JSONL record per benchmark run.
+
+``benchmarks/run.py`` calls :func:`append_history` after every
+``bench_*`` module writes its JSON report — full runs append to
+``BENCH_history.jsonl`` at the repo root (committed, so the trajectory
+rides with the anchors), smoke runs to the smoke temp directory.  Each
+record carries the run's claim verdicts and the module's guarded
+headline metrics (the same ones the regression sentinel bands —
+``repro.obs.regress.GUARDED``), so
+``python -m repro.obs.regress`` can render how every claim and metric
+moved across PRs instead of only knowing the latest anchor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.obs.regress import HISTORY_NAME, guarded_metrics
+
+__all__ = ["HISTORY_NAME", "history_record", "append_history",
+           "load_history"]
+
+
+def history_record(module: str, report: dict, *, smoke: bool,
+                   source: str = "bench") -> dict:
+    """One history line for a bench module's JSON report.  ``module`` is
+    the anchor name ('engine', 'dist', ...), ``source`` distinguishes
+    live runs from anchor imports."""
+    ts = time.time()
+    return {
+        "ts": ts,
+        "ts_iso": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime(ts)),
+        "module": module,
+        "smoke": bool(smoke),
+        "source": source,
+        "claims": {k: bool(v)
+                   for k, v in (report.get("claims") or {}).items()},
+        "metrics": guarded_metrics(module, report),
+    }
+
+
+def append_history(path, record: dict) -> None:
+    """Append one record (the file is append-only by construction: the
+    only writer opens with mode 'a')."""
+    with open(path, "a") as fh:
+        fh.write(json.dumps(record) + "\n")
+
+
+def load_history(path) -> list[dict]:
+    out = []
+    if os.path.exists(path):
+        with open(path) as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+    return out

@@ -20,6 +20,7 @@ assertions — a fast CI gate that keeps the perf anchors from silently
 rotting (tests/test_benchmarks_smoke.py wires it into the tier-1 suite)."""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import tempfile
@@ -54,6 +55,25 @@ def _bench_json_path(name: str, out_dir: str) -> str:
     return os.path.join(out_dir, f"BENCH_{name[len('bench_'):]}.json")
 
 
+def _append_history(name: str, out_dir: str, smoke: bool) -> None:
+    """One BENCH_history.jsonl record per bench module run: the JSON
+    report's claims + guarded metrics, with the failure details
+    check_claims logged.  Full runs append at the repo root (the
+    committed trajectory), smoke runs inside the smoke temp dir."""
+    from . import common
+    from .history import HISTORY_NAME, append_history, history_record
+    json_path = _bench_json_path(name, out_dir)
+    if not os.path.exists(json_path):
+        return
+    with open(json_path) as fh:
+        report = json.load(fh)
+    record = history_record(name[len("bench_"):], report, smoke=smoke)
+    for logged in common.CLAIMS_LOG:
+        if logged["module"] == name and logged["failed"]:
+            record["failed_details"] = logged["failed"]
+    append_history(os.path.join(out_dir, HISTORY_NAME), record)
+
+
 def main() -> None:
     argv = sys.argv
     smoke = "--smoke" in argv[1:]
@@ -86,6 +106,13 @@ def main() -> None:
                   flush=True)
         finally:
             sys.argv = argv
+        if name.startswith("bench_"):
+            # the JSON report lands even when claims fail — record the
+            # trajectory either way (a FAILED row with numbers beats a gap)
+            try:
+                _append_history(name, out_dir, smoke)
+            except Exception:
+                traceback.print_exc()
     if smoke:
         print(f"smoke reports under {out_dir}", flush=True)
     if failures:

@@ -188,6 +188,22 @@ def _validate(spec: RunSpec) -> None:
     if spec.checkpoint.resume and not spec.checkpoint.directory:
         raise SpecError("CheckpointSpec.resume needs a checkpoint "
                         "directory (--ckpt-dir) to restore from")
+    if spec.obs.fleet:
+        if not spec.obs.enabled:
+            raise SpecError("ObsSpec.fleet needs ObsSpec.enabled=True")
+        if hosts < 2:
+            raise SpecError(
+                "ObsSpec.fleet records one event lane per host and aligns "
+                "them at the stage-flush collectives — it needs hosts > 1 "
+                "(single-host runs have one stream and no barriers)")
+    if spec.obs.health and not spec.obs.enabled:
+        raise SpecError("ObsSpec.health needs ObsSpec.enabled=True")
+    if spec.obs.slo:
+        from ..obs.health import SLO_DEFAULTS
+        unknown = set(spec.obs.slo) - set(SLO_DEFAULTS)
+        if unknown:
+            raise SpecError(f"unknown ObsSpec.slo knobs {sorted(unknown)}; "
+                            f"known: {sorted(SLO_DEFAULTS)}")
     if spec.serve.enabled:
         raise SpecError(
             "ServeSpec.enabled describes the serve-while-you-train closed "
@@ -515,6 +531,7 @@ class Session:
         self._callbacks: list[Callable] = []
         engine.stage_callback = self._stage_end
         self.recorder = None            # EventRecorder when obs is enabled
+        self.health = None              # HealthMonitor when obs.health
         if spec.obs.enabled:
             self._wire_obs()
 
@@ -522,17 +539,33 @@ class Session:
     def _wire_obs(self) -> None:
         """One recorder through the whole stack: engine stage spans, data
         plane meters/prefetchers, the simulated clock and the checkpointer
-        all emit into the same totally-ordered stream."""
-        from ..obs import EventRecorder
+        all emit into the same totally-ordered stream.
+
+        With ``obs.fleet`` the recorder is a :class:`FleetRecorder`:
+        driver-side events keep flowing through it (into the driver lane)
+        while ``attach_dataset`` routes each host's meter/prefetcher into
+        that host's own lane — one stream per host, merged after the run.
+        With ``obs.health`` a :class:`HealthMonitor` taps every lane and
+        runs the streaming detectors while the run is live."""
+        obs = self.spec.obs
+        if obs.fleet:
+            from ..obs.fleet import FleetRecorder
+            rec = FleetRecorder(hosts=range(self.spec.topology.hosts))
+        else:
+            from ..obs import EventRecorder
+            rec = EventRecorder()
         from ..obs.metrics import attach_clock, attach_dataset
-        rec = EventRecorder()
         self.recorder = rec
         self.engine.recorder = rec
         attach_dataset(self.dataset, rec)
         attach_clock(self.clock, rec)
         if self.checkpointer is not None:
             self.checkpointer.recorder = rec
-        if self.spec.obs.profile:
+        if obs.health:
+            from ..obs.health import HealthMonitor
+            self.health = HealthMonitor(slo=obs.slo)
+            self.health.attach(rec)
+        if obs.profile:
             from ..obs.profile import StageProfiler
             self.engine.profiler = StageProfiler(rec)
 
@@ -543,7 +576,29 @@ class Session:
             raise SpecError("run_report needs observability: set "
                             "RunSpec.obs.enabled=True before build()")
         from ..obs import RunReport
+        from ..obs.fleet import FleetRecorder
+        if isinstance(self.recorder, FleetRecorder):
+            # the meters live in the host lanes — fold over the merged
+            # stream so the claims see every lane's traffic
+            return RunReport(self.recorder.merged().events)
         return RunReport.from_recorder(self.recorder)
+
+    def health_report(self):
+        """The live :class:`~repro.obs.health.HealthReport` (needs
+        ``RunSpec.obs.health``)."""
+        if self.health is None:
+            raise SpecError("health_report needs the live detectors: set "
+                            "RunSpec.obs.health=True before build()")
+        return self.health.report()
+
+    def fleet_trace(self):
+        """The merged per-host :class:`~repro.obs.fleet.FleetTrace`
+        (needs ``RunSpec.obs.fleet``)."""
+        from ..obs.fleet import FleetRecorder
+        if not isinstance(self.recorder, FleetRecorder):
+            raise SpecError("fleet_trace needs per-host lanes: set "
+                            "RunSpec.obs.fleet=True before build()")
+        return self.recorder.merged()
 
     def _emit_run_meta(self) -> None:
         stores = getattr(self.dataset, "stores", None) or ()
@@ -559,13 +614,34 @@ class Session:
         obs = self.spec.obs
         d = pathlib.Path(obs.dir)
         d.mkdir(parents=True, exist_ok=True)
-        out = {"events": str(d / "events.jsonl")}
-        self.recorder.to_jsonl(out["events"])
-        if obs.chrome_trace:
-            out["trace"] = str(d / "trace.json")
-            self.recorder.to_chrome_trace(out["trace"])
+        from ..obs.fleet import FleetRecorder
+        if isinstance(self.recorder, FleetRecorder):
+            # one JSONL per lane + the causally-ordered merged trace
+            out = {"lanes": self.recorder.save(d)}
+            merged = self.recorder.merged()
+            out["fleet"] = str(d / "fleet.jsonl")
+            merged.to_jsonl(out["fleet"])
+            out["fleet_summary"] = str(d / "fleet.json")
+            with open(out["fleet_summary"], "w") as fh:
+                import json
+                json.dump(merged.summary(), fh, indent=2)
+            # events.jsonl stays the driver stream: every existing
+            # consumer (CI validator, RunReport loaders) keeps working
+            out["events"] = str(d / "events.jsonl")
+            self.recorder.driver.to_jsonl(out["events"])
+            if obs.chrome_trace:
+                out["trace"] = str(d / "fleet_trace.json")
+                merged.to_chrome_trace(out["trace"])
+        else:
+            out = {"events": str(d / "events.jsonl")}
+            self.recorder.to_jsonl(out["events"])
+            if obs.chrome_trace:
+                out["trace"] = str(d / "trace.json")
+                self.recorder.to_chrome_trace(out["trace"])
         if obs.report:
             out.update(self.run_report().save(d))
+        if self.health is not None:
+            out.update(self.health.report().save(d))
         return out
 
     # ------------------------------------------------------------- boundaries

@@ -259,13 +259,28 @@ class ObsSpec(_Spec):
     when ``chrome_trace``, + ``report.json``/``report.txt`` when
     ``report``) after the run; ``profile`` wires the per-stage HLO cost
     estimator, and ``jax_profiler_dir`` additionally captures a
-    ``jax.profiler`` trace."""
+    ``jax.profiler`` trace.
+
+    ``fleet`` (multi-host only) gives every simulated host its own event
+    lane — ``dir`` then additionally lands one ``events_host<h>.jsonl``
+    per host plus the causally-ordered merged trace ``fleet.jsonl`` (+
+    ``fleet_trace.json`` when ``chrome_trace``) and the alignment summary
+    ``fleet.json``.  ``health`` runs the live streaming detectors
+    (``repro.obs.health``) over the stream and lands
+    ``health.json``/``health.txt`` next to the RunReport; ``slo``
+    overrides their thresholds (see ``repro.obs.health.SLO_DEFAULTS``)."""
     enabled: bool = False
     dir: str | None = None          # event log / trace / report directory
     chrome_trace: bool = False      # also export trace.json (Perfetto)
     report: bool = True             # write RunReport when dir is set
     profile: bool = False           # per-stage HLO FLOP/byte estimates
     jax_profiler_dir: str | None = None
+    fleet: bool = False             # per-host event lanes + merged trace
+    health: bool = False            # live health detectors + HealthReport
+    slo: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        _set(self, slo=dict(self.slo))
 
 
 # -------------------------------------------------------------------- model

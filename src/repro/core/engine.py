@@ -751,10 +751,12 @@ class BetEngine:
                 rec.var, rec.g2 = float(pulled["var"]), float(pulled["g2"])
             expand = policy.should_expand(info, rec)
             if obs is not None:
+                fs = pulled["f"]
                 obs.instant("expand.decision", expand=bool(expand),
                             window=info.n_t, steps=rec.steps,
                             var=rec.var, g2=rec.g2,
-                            triggered=bool(rec.triggered))
+                            triggered=bool(rec.triggered),
+                            f_last=float(fs[-1]) if len(fs) else None)
             if expand:
                 break
             if rec.steps > self.max_engine_steps:
@@ -929,9 +931,11 @@ class BetEngine:
                     rec.var, rec.g2 = float(v), float(g2)
                 expand = policy.should_expand(info, rec)
                 if obs is not None:
+                    fs = rec.f_fast_on_t
                     obs.instant("expand.decision", expand=bool(expand),
                                 window=n_t, steps=rec.steps, var=rec.var,
-                                g2=rec.g2, triggered=rec.triggered)
+                                g2=rec.g2, triggered=rec.triggered,
+                                f_last=float(fs[-1]) if len(fs) else None)
                 if expand:
                     break
                 if rec.steps > self.max_engine_steps:

@@ -103,10 +103,13 @@ class DistributedDataset:
             growth=self.growth, prefetch_workers=self.prefetch_workers,
             windows=[sw.lane(lane) for sw in self.stacked])
         # re-wire observability onto rebuilt planes: the meter object
-        # survives a lane rebuild (stays wrapped), the Prefetcher does not
+        # survives a lane rebuild (stays wrapped), the Prefetcher does not;
+        # under fleet obs the rebuilt prefetcher emits into its host's lane
         rec = getattr(self, "_obs_recorder", None)
         if rec is not None:
-            plane.prefetcher.recorder = rec
+            lane_of = getattr(rec, "lane", None)
+            plane.prefetcher.recorder = \
+                lane_of(lane) if lane_of is not None else rec
             plane.prefetcher.recorder_tags = {"host": int(lane)}
         return plane
 
@@ -241,3 +244,9 @@ class DistributedBetEngine(BetEngine):
         if self.recorder is not None:
             self.recorder.instant("stage.host_records", stage=info.stage,
                                   n_t=info.n_t, hosts=gathered)
+            # the all-gather is the once-per-stage sync point every host
+            # passes through — under fleet obs, mark it in every lane so
+            # the merger can align per-host clocks (obs/fleet.py)
+            barrier = getattr(self.recorder, "barrier", None)
+            if barrier is not None:
+                barrier(stage=info.stage, n_t=info.n_t)

@@ -378,10 +378,18 @@ class ElasticBetEngine(DistributedBetEngine):
             ctx["trace"].meta.setdefault("elastic_events", []).append(
                 {"stage": info.stage, "n_t": info.n_t, "events": events})
             if self.recorder is not None:
+                lane_of = getattr(self.recorder, "lane", None)
                 for ev in events:
                     self.recorder.instant(
                         f"elastic.{ev.get('kind', 'event')}",
                         tags={"stage": info.stage}, n_t=info.n_t, **ev)
+                    # under fleet obs, mirror the event into the affected
+                    # host's own lane so its trace shows the fault in-line
+                    host = ev.get("worker", ev.get("lane"))
+                    if lane_of is not None and isinstance(host, int):
+                        lane_of(host).instant(
+                            f"elastic.{ev.get('kind', 'event')}",
+                            tags={"stage": info.stage}, n_t=info.n_t, **ev)
 
     def run(self, dataset, optimizer, objective, policy, **kw):
         trace = super().run(dataset, optimizer, objective, policy, **kw)

@@ -41,6 +41,14 @@ from typing import Any, Iterable
 
 KINDS = ("span", "instant", "counter")
 
+#: JSONL log versions: 1 — one recorder's stream; 2 — a merged fleet trace
+#: (per-host streams aligned at stage-flush barriers; events additionally
+#: carry ``t_raw``/``lane_seq``/``skew_s`` columns).  Logs open with a
+#: ``{"schema_version": N}`` header record; headerless logs are legacy v1.
+SCHEMA_VERSION = 1
+FLEET_SCHEMA_VERSION = 2
+KNOWN_SCHEMA_VERSIONS = (SCHEMA_VERSION, FLEET_SCHEMA_VERSION)
+
 #: The JSONL schema ``validate_events`` enforces (one object per line).
 SCHEMA = {
     "name": "str — event name, dot-namespaced (e.g. 'stage.compute')",
@@ -76,13 +84,24 @@ class EventRecorder:
     ``set_context(stage=3)`` merges into every subsequent event's tags until
     cleared — the engine sets the stage there once per boundary instead of
     threading it through every call site.  Explicit per-event ``tags``
-    override the context."""
+    override the context.
 
-    def __init__(self):
+    ``clock`` overrides the timestamp source (default
+    ``time.perf_counter``) — a simulated host lane runs on its own skewed
+    clock, exactly like a real per-process ``perf_counter`` with an
+    arbitrary origin; the fleet merger re-aligns those at stage barriers.
+
+    ``add_listener(fn)`` registers a live tap: ``fn(event_dict)`` is called
+    on every emission, after the event lands (outside the lock, so a
+    listener may itself emit — the health detectors do)."""
+
+    def __init__(self, *, clock=None):
         self._lock = threading.Lock()
         self._events: list[Event] = []
         self._context: dict = {}
         self._seq = 0
+        self._now = clock if clock is not None else time.perf_counter
+        self._listeners: list = []
 
     # ------------------------------------------------------------- emission
     def _emit(self, name: str, kind: str, t: float, dur: float | None,
@@ -95,18 +114,23 @@ class EventRecorder:
                        thread=threading.current_thread().name)
             self._seq += 1
             self._events.append(ev)
+            listeners = list(self._listeners)
+        if listeners:
+            d = ev.to_dict()
+            for fn in listeners:
+                fn(d)
         return ev
 
     def instant(self, name: str, *, tags: dict | None = None,
                 fields: dict | None = None, **kw) -> Event:
         # explicit ``fields=`` admits payload keys that collide with the
         # signature (a field literally called "name", as run.meta carries)
-        return self._emit(name, "instant", time.perf_counter(), None,
+        return self._emit(name, "instant", self._now(), None,
                           tags, {**(fields or {}), **kw})
 
     def counter(self, name: str, *, tags: dict | None = None,
                 fields: dict | None = None, **kw) -> Event:
-        return self._emit(name, "counter", time.perf_counter(), None,
+        return self._emit(name, "counter", self._now(), None,
                           tags, {**(fields or {}), **kw})
 
     @contextlib.contextmanager
@@ -115,12 +139,17 @@ class EventRecorder:
         begin/end pairing can never be broken by an exception.  The yielded
         dict collects extra fields discovered inside the block."""
         extra: dict = {}
-        t0 = time.perf_counter()
+        t0 = self._now()
         try:
             yield extra
         finally:
-            self._emit(name, "span", t0, time.perf_counter() - t0,
+            self._emit(name, "span", t0, self._now() - t0,
                        tags, {**fields, **extra})
+
+    def add_listener(self, fn) -> None:
+        """Register a live event tap (``fn(event_dict)`` per emission)."""
+        with self._lock:
+            self._listeners.append(fn)
 
     # -------------------------------------------------------------- context
     def set_context(self, **tags) -> None:
@@ -149,12 +178,10 @@ class EventRecorder:
 
     # ---------------------------------------------------------------- sinks
     def to_jsonl(self, path) -> int:
-        """One JSON object per line (``SCHEMA``); returns the event count."""
-        evs = self.event_dicts()
-        with open(path, "w") as fh:
-            for e in evs:
-                fh.write(json.dumps(e, default=_json_safe) + "\n")
-        return len(evs)
+        """One JSON object per line (``SCHEMA``) behind a
+        ``{"schema_version": 1}`` header record; returns the event count
+        (header excluded)."""
+        return write_jsonl(path, self.event_dicts())
 
     def to_chrome_trace(self, path) -> int:
         """Chrome ``trace_event`` JSON, viewable in Perfetto.  The ``host``
@@ -177,20 +204,48 @@ def _json_safe(v):
 
 
 # ------------------------------------------------------------- chrome export
+def _host_pids(events: list[dict]) -> dict:
+    """Stable ``host`` tag -> Chrome pid lane.  Int hosts keep their value;
+    every other distinct tag (``"driver"``, a hostname string, a missing
+    tag) gets its own lane above the int range — non-int hosts used to all
+    collapse into pid 0 and merge in Perfetto."""
+    seen: list = []
+    for e in events:
+        h = (e.get("tags") or {}).get("host")
+        if h not in seen:
+            seen.append(h)
+    pids: dict = {h: h for h in seen
+                  if isinstance(h, int) and not isinstance(h, bool)}
+    next_pid = max(pids.values(), default=-1) + 1
+    for h in seen:
+        if h not in pids:
+            pids[h] = next_pid
+            next_pid += 1
+    return pids
+
+
 def chrome_trace(events: Iterable[dict]) -> dict:
-    """Event dicts -> a Chrome ``trace_event`` document (Perfetto-loadable)."""
+    """Event dicts -> a Chrome ``trace_event`` document (Perfetto-loadable).
+    Each distinct ``host`` tag is its own pid lane, named by a
+    ``process_name`` metadata row."""
+    events = list(events)
+    pids = _host_pids(events)
     tids: dict[str, int] = {}
     trace: list[dict] = []
+    for h, pid in pids.items():
+        name = "driver" if h is None else f"host {h}"
+        trace.append({"name": "process_name", "ph": "M", "pid": pid,
+                      "tid": 0, "args": {"name": name}})
     for e in events:
+        tags = e.get("tags") or {}
+        pid = pids[tags.get("host")]
         thread = e.get("thread", "main")
         if thread not in tids:
             tids[thread] = len(tids)
-            trace.append({"name": "thread_name", "ph": "M", "pid": 0,
-                          "tid": tids[thread],
-                          "args": {"name": thread}})
-        tags = e.get("tags") or {}
-        pid = tags.get("host", 0)
-        pid = pid if isinstance(pid, int) else 0
+            for p in set(pids.values()):
+                trace.append({"name": "thread_name", "ph": "M", "pid": p,
+                              "tid": tids[thread],
+                              "args": {"name": thread}})
         args = {**tags, **(e.get("fields") or {})}
         row = {"name": e["name"], "ts": e["t"] * 1e6, "pid": pid,
                "tid": tids[thread]}
@@ -206,16 +261,42 @@ def chrome_trace(events: Iterable[dict]) -> dict:
     return {"traceEvents": trace, "displayTimeUnit": "ms"}
 
 
-# ---------------------------------------------------------------- jsonl load
-def from_jsonl(path) -> list[dict]:
-    """Load an ``EventRecorder.to_jsonl`` log back into event dicts."""
-    out = []
+# ---------------------------------------------------------------- jsonl io
+def write_jsonl(path, events: list[dict], *,
+                schema_version: int = SCHEMA_VERSION) -> int:
+    """Write a versioned JSONL event log: one ``{"schema_version": N}``
+    header record, then one event object per line."""
+    with open(path, "w") as fh:
+        fh.write(json.dumps({"schema_version": int(schema_version)}) + "\n")
+        for e in events:
+            fh.write(json.dumps(e, default=_json_safe) + "\n")
+    return len(events)
+
+
+def read_log(path) -> tuple[int | None, list[dict]]:
+    """Load a JSONL event log as ``(schema_version, events)``.  A leading
+    ``{"schema_version": N}`` record is the version header; logs without
+    one are legacy streams (version ``None``, treated as v1)."""
+    version = None
+    out: list[dict] = []
     with open(path) as fh:
         for line in fh:
             line = line.strip()
-            if line:
-                out.append(json.loads(line))
-    return out
+            if not line:
+                continue
+            rec = json.loads(line)
+            if not out and version is None and isinstance(rec, dict) \
+                    and "schema_version" in rec and "name" not in rec:
+                version = rec["schema_version"]
+                continue
+            out.append(rec)
+    return version, out
+
+
+def from_jsonl(path) -> list[dict]:
+    """Load an ``EventRecorder.to_jsonl`` log back into event dicts (the
+    version header, when present, is stripped)."""
+    return read_log(path)[1]
 
 
 def validate_events(events: Iterable[dict]) -> list[str]:
@@ -268,7 +349,11 @@ def main(argv: list[str] | None = None) -> int:
         description="Validate an observability JSONL event log")
     ap.add_argument("path", help="events.jsonl written by EventRecorder")
     args = ap.parse_args(argv)
-    events = from_jsonl(args.path)
+    version, events = read_log(args.path)
+    if version is not None and version not in KNOWN_SCHEMA_VERSIONS:
+        print(f"INVALID: unknown schema_version {version!r} "
+              f"(known: {KNOWN_SCHEMA_VERSIONS})")
+        return 1
     errors = validate_events(events)
     if errors:
         for err in errors[:50]:
@@ -279,7 +364,8 @@ def main(argv: list[str] | None = None) -> int:
     kinds: dict[str, int] = {}
     for e in events:
         kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
-    print(f"{args.path}: {len(events)} events valid "
+    label = "legacy" if version is None else f"v{version}"
+    print(f"{args.path}: {len(events)} events valid ({label}) "
           + " ".join(f"{k}={v}" for k, v in sorted(kinds.items())))
     return 0
 

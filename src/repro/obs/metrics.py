@@ -221,16 +221,21 @@ def attach_dataset(dataset, recorder):
     each lane plane's prefetcher — never the ``meter`` property, which
     builds a fresh combined object per call.  ``_obs_recorder`` is stashed
     on the dataset so elastically *rebuilt* lane planes (host loss) re-wire
-    their fresh prefetchers inside ``_make_plane``.
+    their fresh prefetchers inside ``_make_plane``.  When ``recorder`` is
+    a :class:`~repro.obs.fleet.FleetRecorder` (it has per-host ``lane``
+    streams), each host's meter and prefetcher emit into that host's own
+    lane instead of the shared stream.
 
     Single-host ``StreamingDataset``: its one meter and prefetcher.  Plain
     host-slice datasets have no meters; no-op."""
     planes = getattr(dataset, "planes", None)
     if planes is not None:
         dataset._obs_recorder = recorder
+        lane = getattr(recorder, "lane", None)
         for h, plane in planes.items():
-            attach_meter(dataset.host_meters[h], recorder, host=int(h))
-            attach_prefetcher(plane.prefetcher, recorder, host=int(h))
+            host_rec = lane(h) if lane is not None else recorder
+            attach_meter(dataset.host_meters[h], host_rec, host=int(h))
+            attach_prefetcher(plane.prefetcher, host_rec, host=int(h))
         attach_meter(dataset._access, recorder, src="access")
         return dataset
     meter = getattr(dataset, "meter", None)

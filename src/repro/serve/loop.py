@@ -164,6 +164,11 @@ class ServeTrainLoop:
         self.recorder = EventRecorder()
         attach_server(self.server, self.recorder)
         self.run_report: RunReport | None = None
+        self.health = None
+        if spec.obs.health:
+            from ..obs.health import HealthMonitor
+            self.health = HealthMonitor(slo=spec.obs.slo)
+            self.health.attach(self.recorder)
 
     # ------------------------------------------------------------- serving
     def tick(self) -> bool:
@@ -233,6 +238,10 @@ class ServeTrainLoop:
                                           int(eval_tokens.shape[0]))
         policy = build_policy(spec.policy)
         wired = _attach_traffic(policy, self.store, self.tick)
+        if self.health is not None and wired:
+            # the stall detector's limit is the wired policy's give-up point
+            self.health.set_hold_limit(
+                max(p.max_hold_chunks for p in wired))
         if not wired:
             raise SpecError(
                 f"the serve loop needs a traffic_driven policy somewhere "
@@ -307,6 +316,8 @@ class ServeTrainLoop:
             "stage_table": rr.stage_rows(),
             "serve_events": rr.serve_summary(),
         }
+        if self.health is not None:
+            rep["health"] = self.health.report().to_dict()
         obs = self.spec.obs
         if obs.enabled and obs.dir:
             d = pathlib.Path(obs.dir)
@@ -316,6 +327,8 @@ class ServeTrainLoop:
                 self.recorder.to_chrome_trace(d / "trace.json")
             if obs.report:
                 rr.save(d)
+            if self.health is not None:
+                self.health.report().save(d)
             rep["obs_dir"] = str(d)
         if self.watcher is not None:
             rep["staleness"] = {

@@ -1,0 +1,394 @@
+"""Fleet observability (tier1): per-host event lanes merged into one
+causally-ordered trace (clock alignment at the stage-flush barriers), the
+live health detectors (straggler flagging a FaultPlan slow@ injection
+*before* the run ends, SLO breaches, stalls, overlap collapse, non-finite
+loss), and the bench regression sentinel against the committed BENCH
+anchors."""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import pytest
+
+from repro.api import (DataSpec, ElasticSpec, ObsSpec, OptimizerSpec,
+                       PolicySpec, RunSpec, ScheduleSpec, SpecError,
+                       TopologySpec, build)
+from repro.obs import EventRecorder, validate_events
+from repro.obs import events as ev
+from repro.obs.fleet import (BARRIER, DRIVER, FleetRecorder, merge_streams)
+from repro.obs import fleet as fleet_mod
+from repro.obs.health import (SLO_DEFAULTS, HealthMonitor, HealthReport)
+from repro.obs import regress
+
+pytestmark = pytest.mark.tier1
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+OPT = OptimizerSpec("newton_cg", {"hessian_fraction": 1.0})
+FIXED = PolicySpec("fixed_steps", {"inner_steps": 3, "final_steps": 5})
+
+
+def _fleet_spec(workdir, **kw):
+    base = dict(
+        data=DataSpec(dataset="w8a_like", scale=0.05, plane="plane",
+                      store="memmap", workdir=str(workdir), shard_size=16,
+                      delay_ms=0.2),
+        policy=FIXED, optimizer=OPT, schedule=ScheduleSpec(n0=64),
+        topology=TopologySpec(hosts=4))
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# ------------------------------------------------------------ FleetRecorder
+def test_fleet_recorder_lanes_barriers_and_save(tmp_path):
+    fr = FleetRecorder(hosts=(0, 1))
+    fr.instant("driver.ev", x=1)                # recorder protocol -> driver
+    fr.lane(0).instant("h0.ev")
+    fr.lane(1).instant("h1.ev")
+    fr.barrier(stage=0, n_t=64)
+    assert len(fr) == 2                         # driver.ev + its barrier
+    streams = fr.streams()
+    assert set(streams) == {DRIVER, 0, 1}
+    for key, stream in streams.items():
+        barriers = [e for e in stream if e["name"] == BARRIER]
+        assert len(barriers) == 1 and barriers[0]["fields"]["stage"] == 0
+        assert validate_events(stream) == []
+    # lane context: every host event is tagged with its host
+    assert streams[0][0]["tags"] == {"host": 0}
+    paths = fr.save(tmp_path)
+    assert sorted(os.path.basename(p) for p in paths.values()) == \
+        ["events_driver.jsonl", "events_host0.jsonl", "events_host1.jsonl"]
+    for p in paths.values():
+        version, events = ev.read_log(p)
+        assert version == ev.SCHEMA_VERSION and events
+    # offline CLI merge over the saved lanes
+    assert fleet_mod.main([str(tmp_path),
+                           "--out", str(tmp_path / "fleet.jsonl")]) == 0
+    version, merged = ev.read_log(tmp_path / "fleet.jsonl")
+    assert version == ev.FLEET_SCHEMA_VERSION
+    assert len(merged) == sum(len(s) for s in streams.values())
+
+
+def test_fleet_listener_taps_every_lane_including_late_ones():
+    fr = FleetRecorder(hosts=(0,))
+    seen = []
+    fr.add_listener(lambda e: seen.append(e["name"]))
+    fr.instant("d")
+    fr.lane(0).instant("h0")
+    fr.lane(7).instant("h7")                    # lane created after the tap
+    assert seen == ["d", "h0", "h7"]
+
+
+def test_merge_realigns_injected_clock_skew():
+    fr = FleetRecorder(hosts=(0, 1), skew={1: 50.0})
+    fr.lane(0).instant("a0")
+    fr.lane(1).instant("a1")
+    fr.barrier(stage=0)
+    fr.lane(0).instant("b0")
+    fr.lane(1).instant("b1")
+    fr.barrier(stage=1)
+    tr = fr.merged()
+    # lane 1 runs 50s ahead; the barrier alignment recovers ~ -50s
+    assert abs(tr.hosts[1]["offset_s"] + 50.0) < 1.0
+    assert abs(tr.hosts[0]["offset_s"]) < 1.0
+    # after alignment the lanes interleave: naive time-sort would have
+    # pushed every lane-1 event past every lane-0 event
+    a1 = next(e for e in tr.events if e["name"] == "a1")
+    b0 = next(e for e in tr.events if e["name"] == "b0")
+    assert a1["seq"] < b0["seq"]
+    assert a1["t_raw"] > b0["t_raw"]            # raw clocks disagree
+    summ = tr.summary()
+    assert summ["schema_version"] == ev.FLEET_SCHEMA_VERSION
+    assert summ["reference"] == DRIVER
+
+
+def test_merge_is_causal_at_stage_barriers():
+    # lane 1's clock is so far ahead that time-sorting would put its
+    # *pre-barrier* events after lane 0's *post-barrier* events; the
+    # segment gate must keep every pre-barrier event first anyway
+    fr = FleetRecorder(hosts=(0, 1), skew={1: 1000.0})
+    fr.lane(1).instant("pre1")
+    fr.lane(0).instant("pre0")
+    fr.barrier(stage=0)
+    fr.lane(0).instant("post0")
+    fr.lane(1).instant("post1")
+    tr = merge_streams({k: v for k, v in fr.streams().items()
+                        if k != DRIVER})        # no driver: host 0 is ref
+    names = [e["name"] for e in tr.events]
+    pre = max(names.index("pre0"), names.index("pre1"))
+    post = min(names.index("post0"), names.index("post1"))
+    barrier_last = max(i for i, e in enumerate(tr.events)
+                       if e["name"] == BARRIER)
+    assert pre < post and barrier_last < post
+    # per-lane emission order survives the merge
+    for key in (0, 1):
+        seqs = [e["lane_seq"] for e in tr.events if e["lane"] == key]
+        assert seqs == sorted(seqs)
+
+
+# -------------------------------------------------------- 4-host fleet run
+def test_four_host_run_writes_lanes_and_merged_causal_trace(tmp_path):
+    obs_dir = tmp_path / "obs"
+    sess = build(_fleet_spec(
+        tmp_path, obs=ObsSpec(enabled=True, fleet=True, health=True,
+                              dir=str(obs_dir), chrome_trace=True)))
+    tr = sess.run()
+    files = tr.meta["obs_files"]
+    # one stream per host + the driver
+    assert set(files["lanes"]) == {0, 1, 2, 3, DRIVER}
+    for p in files["lanes"].values():
+        version, events = ev.read_log(p)
+        assert version == ev.SCHEMA_VERSION
+        assert validate_events(events) == []
+    ft = sess.fleet_trace()
+    # every lane contributed, and each host's lane carries its meter I/O
+    for h in range(4):
+        host_loads = [e for e in ft.events if e["lane"] == h
+                      and e["name"] == "meter.load"]
+        assert host_loads, f"host {h} lane has no meter.load events"
+        assert all(e["tags"]["host"] == h for e in host_loads)
+    # causal order: per-lane emission order is preserved exactly...
+    last: dict = {}
+    for e in ft.events:
+        assert e["lane_seq"] > last.get(e["lane"], -1)
+        last[e["lane"]] = e["lane_seq"]
+    # ...and the stage-k flush is a happens-before edge across lanes
+    stages = sorted({e["fields"]["stage"] for e in ft.events
+                     if e["name"] == BARRIER})
+    for s in stages:
+        last_bar = max(i for i, e in enumerate(ft.events)
+                       if e["name"] == BARRIER
+                       and e["fields"]["stage"] == s)
+        seen_bar = {e["lane"] for i, e in enumerate(ft.events)
+                    if i <= last_bar and e["name"] == BARRIER
+                    and e["fields"]["stage"] == s}
+        assert seen_bar == {DRIVER, 0, 1, 2, 3}
+    # the merged artifacts land next to the legacy single-stream ones
+    version, merged = ev.read_log(files["fleet"])
+    assert version == ev.FLEET_SCHEMA_VERSION
+    assert validate_events(merged) == []
+    assert len(merged) == len(ft.events)
+    assert ev.main([str(files["fleet"])]) == 0      # validator takes v2
+    assert ev.main([str(files["events"])]) == 0     # driver stream intact
+    summary = json.loads((obs_dir / "fleet.json").read_text())
+    assert set(summary["hosts"]) == {"driver", "0", "1", "2", "3"}
+    for lane in summary["hosts"].values():
+        assert {"offset_s", "lag_s", "max_lag_s", "drift_s"} <= set(lane)
+    # chrome export: one pid lane per host plus the driver's own lane
+    chrome = json.loads((obs_dir / "fleet_trace.json").read_text())
+    names = {r["args"]["name"] for r in chrome["traceEvents"]
+             if r.get("ph") == "M" and r["name"] == "process_name"}
+    assert {"host 0", "host 1", "host 2", "host 3", "host driver"} <= names
+    # the claims still recompute over the merged stream (meters live in
+    # the host lanes now)
+    claims = sess.run_report().claims()
+    assert claims["per_host_loads_are_owned_slice"] is True
+    assert claims["each_example_loaded_once"] is True
+
+
+def test_slow_fault_is_flagged_by_straggler_detector_before_run_ends(
+        tmp_path):
+    detected = []
+    sess = build(_fleet_spec(
+        tmp_path,
+        elastic=ElasticSpec(faults=("slow@1:2=0.05",)),
+        obs=ObsSpec(enabled=True, fleet=True, health=True,
+                    slo={"straggler_ratio": 4.0, "straggler_min_loads": 2})))
+    sess.health.on_detection(detected.append)
+    sess.run()
+    hr = sess.health_report()
+    flagged = {d.host for d in hr.detections if d.kind == "straggler"}
+    assert 2 in flagged, hr.to_text()
+    assert not hr.healthy
+    assert any(d.kind == "straggler" and d.host == 2 for d in detected)
+    # live, not post-mortem: the detection event lands in the stream
+    # before the run's final stage.end
+    ft = sess.fleet_trace()
+    det = [e["seq"] for e in ft.events if e["name"] == "health.straggler"
+           and e["tags"].get("host") == 2]
+    ends = [e["seq"] for e in ft.events if e["name"] == "stage.end"]
+    assert det and min(det) < max(ends)
+    # post-hoc replay over the merged trace re-finds the straggler
+    replay = HealthReport.from_events(
+        ft.events, slo={"straggler_ratio": 4.0, "straggler_min_loads": 2})
+    assert any(d.kind == "straggler" and d.host == 2
+               for d in replay.detections)
+
+
+def test_fleet_spec_validation():
+    spec = _fleet_spec("/tmp/x")
+    with pytest.raises(SpecError, match="ObsSpec.fleet"):
+        build(spec.replace(obs=ObsSpec(fleet=True)))
+    with pytest.raises(SpecError, match="hosts > 1"):
+        build(spec.replace(topology=TopologySpec(hosts=1),
+                           data=spec.data.replace(store="memory",
+                                                  workdir=None),
+                           obs=ObsSpec(enabled=True, fleet=True)))
+    with pytest.raises(SpecError, match="ObsSpec.health"):
+        build(spec.replace(obs=ObsSpec(health=True)))
+    with pytest.raises(SpecError, match="slo knobs"):
+        build(spec.replace(obs=ObsSpec(enabled=True, health=True,
+                                       slo={"nope": 1})))
+
+
+# -------------------------------------------------------- health detectors
+def _mon(**slo):
+    rec = EventRecorder()
+    mon = HealthMonitor(slo=slo)
+    mon.attach(rec)
+    return rec, mon
+
+
+def test_staleness_slo_detector_and_emitted_health_events():
+    rec, mon = _mon(staleness_max=1)
+    rec.instant("serve.staleness", staleness=1)     # at the SLO: fine
+    rec.instant("serve.staleness", staleness=None)  # no swap yet: skipped
+    rec.instant("serve.staleness", staleness=3)     # breach
+    (d,) = mon.detections
+    assert d.kind == "staleness_slo" and d.fields["staleness"] == 3
+    health = [e for e in rec.event_dicts()
+              if e["name"] == "health.staleness_slo"]
+    assert len(health) == 1
+    assert health[0]["fields"]["staleness"] == 3
+    det = mon.detector("staleness_slo")
+    assert det.samples == 3 and det.breaches == 1
+    # the recursion guard: our own health.* emission was observed by the
+    # listener but never fed back through the detectors
+    assert mon.events_seen == 3
+
+
+def test_expansion_stall_detector_and_late_hold_limit():
+    rec, mon = _mon(hold_frac=0.8)
+    rec.instant("serve.hold", stage=1, holds=9)     # limit unknown: quiet
+    assert not mon.detections
+    mon.set_hold_limit(10)
+    mon.set_hold_limit(10_000)                      # first bind wins
+    rec.instant("serve.hold", stage=1, holds=7)     # below 0.8 * 10
+    rec.instant("serve.hold", stage=1, holds=8)     # at the limit
+    rec.instant("serve.hold", stage=1, holds=9)     # deduped per stage
+    rec.instant("serve.hold", stage=2, holds=8)     # new stage re-fires
+    kinds = [(d.kind, d.stage) for d in mon.detections]
+    assert kinds == [("expansion_stall", 1), ("expansion_stall", 2)]
+
+
+def test_overlap_collapse_detector_rearms_on_recovery():
+    rec, mon = _mon(overlap_floor=0.5, overlap_min_loads=2)
+    rec.instant("meter.load", duration_s=1.0, blocked_s=0.9)
+    assert not mon.detections                       # warmup
+    rec.instant("meter.load", duration_s=1.0, blocked_s=0.9)
+    assert [d.kind for d in mon.detections] == ["overlap_collapse"]
+    assert mon.detections[0].fields["overlap"] < 0.5
+    rec.instant("meter.load", duration_s=1.0, blocked_s=0.9)
+    assert len(mon.detections) == 1                 # still below: no re-fire
+    for _ in range(20):                             # recover far above floor
+        rec.instant("meter.load", duration_s=1.0, blocked_s=0.0)
+    for _ in range(60):                             # collapse again
+        rec.instant("meter.load", duration_s=1.0, blocked_s=1.0)
+    assert [d.kind for d in mon.detections] == ["overlap_collapse"] * 2
+
+
+def test_nonfinite_loss_detector():
+    rec, mon = _mon()
+    rec.set_context(stage=2)
+    rec.instant("expand.decision", f_last=1.25)
+    rec.instant("expand.decision", f_last=None)     # two-track warmup
+    assert not mon.detections
+    rec.instant("expand.decision", f_last=float("nan"))
+    rec.instant("expand.decision", f_last=float("inf"))  # deduped per stage
+    (d,) = mon.detections
+    assert d.kind == "nonfinite_loss" and d.stage == 2
+    assert math.isnan(float(d.fields["f_last"]))
+
+
+def test_health_monitor_rejects_unknown_slo_and_report_round_trips(
+        tmp_path):
+    with pytest.raises(ValueError, match="unknown slo"):
+        HealthMonitor(slo={"bogus": 1})
+    rec, mon = _mon(staleness_max=0)
+    rec.instant("serve.staleness", staleness=2)
+    rep = mon.report()
+    assert not rep.healthy and rep.events_seen == 1
+    assert rep.slo["staleness_max"] == 0
+    assert set(rep.detectors) == {d.kind for d in mon.detectors}
+    paths = rep.save(tmp_path)
+    saved = json.loads((tmp_path / "health.json").read_text())
+    assert saved["healthy"] is False
+    assert saved["detections"][0]["kind"] == "staleness_slo"
+    text = (tmp_path / "health.txt").read_text()
+    assert text.startswith("health: DEGRADED")
+    assert set(paths) == {"health_json", "health_txt"}
+    # defaults cover every knob exactly once
+    assert set(rep.slo) == set(SLO_DEFAULTS)
+
+
+# --------------------------------------------------------- regression gate
+def _anchors():
+    out = {}
+    for module in regress.MODULES:
+        path = os.path.join(REPO_ROOT, f"BENCH_{module}.json")
+        with open(path) as fh:
+            out[module] = json.load(fh)
+    return out
+
+
+def test_sentinel_passes_on_committed_anchors(capsys):
+    anchors = _anchors()
+    for module, anchor in anchors.items():
+        assert regress.compare(module, anchor, anchor) == []
+    assert regress.main(["--check", REPO_ROOT]) == 0
+    assert "0 regression(s)" in capsys.readouterr().out
+
+
+def test_sentinel_fails_readably_on_degraded_claims_and_metrics(tmp_path,
+                                                                capsys):
+    anchors = _anchors()
+    degraded = json.loads(json.dumps(anchors["dist"]))
+    claim = next(k for k, v in degraded["claims"].items() if v)
+    degraded["claims"][claim] = False
+    degraded["trajectory_max_rel_dev"] = 0.5    # way over the 1e-3 band
+    deltas = regress.compare("dist", anchors["dist"], degraded)
+    kinds = {d.what for d in deltas}
+    assert claim in kinds and "trajectory_max_rel_dev" in kinds
+    rendered = [str(d) for d in deltas]
+    assert any("anchor-green claim failed" in r for r in rendered)
+    assert any("observed 0.5" in r and "above band" in r for r in rendered)
+    # claims-only (the smoke-scale mode) keeps the claim delta, drops bands
+    only = regress.compare("dist", anchors["dist"], degraded,
+                           claims_only=True)
+    assert {d.what for d in only} == {claim}
+    # a missing claim is a regression, not a skip
+    del degraded["claims"][claim]
+    assert any("missing" in d.detail
+               for d in regress.compare("dist", anchors["dist"], degraded))
+    # the CLI gate on a directory holding the degraded report
+    for module, anchor in anchors.items():
+        with open(tmp_path / f"BENCH_{module}.json", "w") as fh:
+            json.dump(degraded if module == "dist" else anchor, fh)
+    assert regress.main(["--check", str(tmp_path),
+                         "--anchors", REPO_ROOT]) == 1
+    assert "REGRESSION dist/" in capsys.readouterr().out
+
+
+def test_history_records_append_and_render(tmp_path):
+    from benchmarks.history import (append_history, history_record,
+                                    load_history)
+    anchors = _anchors()
+    path = tmp_path / "BENCH_history.jsonl"
+    for smoke in (False, True):
+        rec = history_record("dist", anchors["dist"], smoke=smoke)
+        assert rec["module"] == "dist" and rec["smoke"] is smoke
+        assert rec["claims"] and all(isinstance(v, bool)
+                                     for v in rec["claims"].values())
+        assert "trajectory_max_rel_dev" in rec["metrics"]
+        append_history(path, rec)
+    records = load_history(path)
+    assert [r["smoke"] for r in records] == [False, True]
+    text = regress.render_history(records)
+    assert "dist:" in text and "[smoke]" in text and "[full " in text
+    # the committed trajectory is seeded and renders
+    committed = regress.load_history(
+        os.path.join(REPO_ROOT, regress.HISTORY_NAME))
+    assert {r["module"] for r in committed} >= set(regress.MODULES)
+    assert "FAILED" not in regress.render_history(committed)

@@ -99,6 +99,55 @@ def test_recorder_thread_safe_and_chrome_export():
     assert any(r.get("ph") == "M" for r in doc["traceEvents"])
 
 
+def test_chrome_trace_gives_each_host_tag_its_own_pid_lane():
+    rec = EventRecorder()
+    rec.instant("a", tags={"host": 1})
+    rec.instant("b", tags={"host": "driver"})
+    rec.instant("c", tags={"host": "worker-9"})
+    rec.instant("d")                            # untagged -> its own lane
+    doc = chrome_trace(rec.event_dicts())
+    rows = {r["name"]: r for r in doc["traceEvents"] if r.get("ph") != "M"}
+    pids = [rows[n]["pid"] for n in "abcd"]
+    # non-int host tags used to all collapse into pid 0 and merge with
+    # each other (and with real host 0) in Perfetto
+    assert len(set(pids)) == 4
+    assert rows["a"]["pid"] == 1                # int hosts keep their value
+    names = {r["pid"]: r["args"]["name"] for r in doc["traceEvents"]
+             if r.get("ph") == "M" and r["name"] == "process_name"}
+    assert names[rows["a"]["pid"]] == "host 1"
+    assert names[rows["b"]["pid"]] == "host driver"
+    assert names[rows["c"]["pid"]] == "host worker-9"
+    assert names[rows["d"]["pid"]] == "driver"
+
+
+def test_jsonl_schema_version_header_roundtrip(tmp_path, capsys):
+    rec = EventRecorder()
+    rec.instant("a", x=1)
+    path = tmp_path / "events.jsonl"
+    assert rec.to_jsonl(path) == 1              # header excluded from count
+    first = json.loads(path.read_text().splitlines()[0])
+    assert first == {"schema_version": ev.SCHEMA_VERSION}
+    version, events = ev.read_log(path)
+    assert version == ev.SCHEMA_VERSION
+    assert events == rec.event_dicts()          # header stripped on read
+    assert ev.main([str(path)]) == 0
+    assert f"(v{ev.SCHEMA_VERSION})" in capsys.readouterr().out
+    # legacy headerless logs still load and validate
+    legacy = tmp_path / "legacy.jsonl"
+    legacy.write_text("\n".join(json.dumps(e)
+                                for e in rec.event_dicts()) + "\n")
+    assert ev.read_log(legacy) == (None, rec.event_dicts())
+    assert from_jsonl(legacy) == rec.event_dicts()
+    assert ev.main([str(legacy)]) == 0
+    assert "(legacy)" in capsys.readouterr().out
+    # unknown future versions are rejected, not mis-parsed
+    future = tmp_path / "future.jsonl"
+    future.write_text(json.dumps({"schema_version": 99}) + "\n"
+                      + json.dumps(rec.event_dicts()[0]) + "\n")
+    assert ev.main([str(future)]) == 1
+    assert "unknown schema_version" in capsys.readouterr().out
+
+
 def test_validate_events_flags_malformed(tmp_path, capsys):
     ok = {"name": "a", "kind": "instant", "t": 0.0, "dur": None,
           "tags": {}, "fields": {}, "seq": 0, "thread": "m"}
@@ -193,6 +242,25 @@ def test_prefetcher_events_ordered_across_threads():
     assert "prefetch.landed" not in by_shard.get(2, {})
     assert "prefetch.cancelled" in by_shard[2]
     assert validate_events(evs) == []
+
+
+# ------------------------------------------------------------ serve summary
+def test_serve_summary_with_all_none_staleness_samples():
+    # before the first hot swap every staleness probe returns None — the
+    # summary must not crash on max() and must report 0, not None
+    rec = EventRecorder()
+    with rec.span("serve.tick", tick=1):
+        rec.instant("serve.ingest", examples=8)
+        rec.instant("serve.staleness", staleness=None)
+        rec.instant("serve.staleness", staleness=None)
+    s = RunReport.from_recorder(rec).serve_summary()
+    assert s["staleness_samples"] == [None, None]
+    assert s["max_staleness"] == 0
+    assert s["ticks"] == 1 and s["ingested_examples"] == 8
+    # and an int sample still dominates the Nones
+    rec.instant("serve.staleness", staleness=2)
+    assert RunReport.from_recorder(rec).serve_summary()[
+        "max_staleness"] == 2
 
 
 # ------------------------------------------------------- session round trip
