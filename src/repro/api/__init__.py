@@ -6,11 +6,13 @@
 # printed by --dry-run).
 from .specs import (CheckpointSpec, DataSpec, ElasticSpec, ModelSpec,
                     ObsSpec, OptimizerSpec, PolicySpec, RunSpec,
-                    ScheduleSpec, ServeSpec, SpecError, TopologySpec)
-from .registry import (OPTIMIZERS, POLICIES, STORES, TOPOLOGIES, WORKLOADS,
-                       build_optimizer, build_policy, make_store,
+                    ScheduleSpec, ServeSpec, SpecError, TieringSpec,
+                    TopologySpec)
+from .registry import (OPTIMIZERS, POLICIES, STORES, TIERS, TOPOLOGIES,
+                       WORKLOADS, build_optimizer, build_policy, make_store,
                        optimizer_spec_of, register_optimizer,
-                       register_policy, register_store, register_workload)
+                       register_policy, register_store,
+                       register_tier_manager, register_workload)
 from .session import (Session, build, check_resume_spec, convex_problem,
                       resume_session, run)
 from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
@@ -18,12 +20,12 @@ from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
 __all__ = [
     "RunSpec", "DataSpec", "PolicySpec", "OptimizerSpec", "ScheduleSpec",
     "TopologySpec", "ElasticSpec", "CheckpointSpec", "ServeSpec",
-    "ObsSpec", "ModelSpec", "SpecError", "Session", "build", "run",
-    "convex_problem",
+    "ObsSpec", "ModelSpec", "TieringSpec", "SpecError", "Session", "build",
+    "run", "convex_problem",
     "resume_session", "check_resume_spec",
-    "POLICIES", "OPTIMIZERS", "STORES", "TOPOLOGIES", "WORKLOADS",
+    "POLICIES", "OPTIMIZERS", "STORES", "TIERS", "TOPOLOGIES", "WORKLOADS",
     "build_policy", "build_optimizer", "optimizer_spec_of", "make_store",
     "register_policy", "register_optimizer", "register_store",
-    "register_workload",
+    "register_tier_manager", "register_workload",
     "LMStepOptimizer", "TokenWindows", "make_lm_objective",
 ]

@@ -14,6 +14,7 @@ from typing import Any, Callable
 from ..core.engine import (ComposedPolicy, ExpansionPolicy, FixedSteps,
                            GradientVariance, NeverExpand, TwoTrack)
 from ..data.shards import InMemoryShardStore, MemmapShardStore, ThrottledStore
+from ..data.tiers import RingTierManager
 from ..dist.topology import ProcessTopology, SimulatedTopology
 from ..optim import REGISTRY as _OPTIM_REGISTRY
 from ..optim.api import BatchOptimizer
@@ -79,6 +80,14 @@ STORES = Registry("store", {
     "memmap": MemmapShardStore,
 })
 
+# ------------------------------------------------------------ tier managers
+# name -> TierManager class (repro.data.tiers): decides which rows of the
+# expanding window are HBM-hot under a byte budget; named by
+# TieringSpec.manager
+TIERS = Registry("tier manager", {
+    RingTierManager.name: RingTierManager,
+})
+
 # --------------------------------------------------------------- topologies
 TOPOLOGIES = Registry("topology", {
     "simulated": SimulatedTopology,
@@ -102,6 +111,10 @@ def register_optimizer(name: str, cls) -> Any:
 
 def register_store(name: str, cls) -> Any:
     return STORES.register(name, cls)
+
+
+def register_tier_manager(name: str, cls) -> Any:
+    return TIERS.register(name, cls)
 
 
 def register_workload(name: str, preset) -> Any:

@@ -46,9 +46,10 @@ from ..models import transformer as T
 from ..models.linear import LOSSES, init_params, make_example_losses, \
     make_objective
 from .lm import LMStepOptimizer, TokenWindows, make_lm_objective
-from .registry import (LM_OPTIMIZER, OPTIMIZERS, STORES, TOPOLOGIES,
+from ..data.tiers import TieredCorpus
+from .registry import (LM_OPTIMIZER, OPTIMIZERS, STORES, TIERS, TOPOLOGIES,
                        build_optimizer, build_policy, make_store)
-from .specs import DataSpec, RunSpec, SpecError
+from .specs import DataSpec, RunSpec, SpecError, TieringSpec
 
 
 # ------------------------------------------------------------ convex problem
@@ -59,7 +60,8 @@ from .specs import DataSpec, RunSpec, SpecError
 # host run really is the plane run's compile warmup)
 _SERVING_FIELDS = dict(plane="host", store="memory", workdir=None,
                        shard_size=64, delay_ms=0.0, prefetch_workers=1,
-                       corpus_size=1024, seq_len=128, eval_rows=64)
+                       corpus_size=1024, seq_len=128, eval_rows=64,
+                       tiering=TieringSpec())
 
 
 @functools.lru_cache(maxsize=8)
@@ -116,6 +118,38 @@ def _validate(spec: RunSpec) -> None:
         raise SpecError(f"delay_ms must be >= 0, got {d.delay_ms}")
     if hosts < 1:
         raise SpecError(f"TopologySpec.hosts must be >= 1, got {hosts}")
+
+    t = d.tiering
+    if t.enabled:
+        if d.plane != "plane":
+            raise SpecError(
+                "tiering needs the streaming plane (DataSpec.plane="
+                "'plane'): the host-slice path has no device window to "
+                "budget")
+        if d.kind != "convex":
+            raise SpecError("tiering currently serves the convex streaming "
+                            "path only; the LM token plane is untiered")
+        if t.hbm_bytes < 1:
+            raise SpecError(f"TieringSpec.enabled needs hbm_bytes >= 1 "
+                            f"(the hot-window byte budget), got "
+                            f"{t.hbm_bytes}")
+        if t.host_bytes < 0:
+            raise SpecError(f"TieringSpec.host_bytes must be >= 0 "
+                            f"(0 = unbounded ring), got {t.host_bytes}")
+        if t.max_inflight is not None and t.max_inflight < 1:
+            raise SpecError(f"TieringSpec.max_inflight must be >= 1 or "
+                            f"None, got {t.max_inflight}")
+        if hosts > 1:
+            raise SpecError(
+                "tiering is single-host for now: the rotation sweep is not "
+                "SPMD-wired (per-lane hot windows would need a "
+                "synchronized segment plan across hosts)")
+        TIERS.get(t.manager)
+    elif t.hbm_bytes or t.host_bytes or t.max_inflight is not None:
+        raise SpecError(
+            "TieringSpec budgets are set but enabled=False — enable "
+            "tiering or drop the budgets (a silently untiered run would "
+            "misreport the scaling study)")
 
     if d.kind == "lm":
         if spec.model is None:
@@ -223,6 +257,12 @@ def _validate_policy(spec: RunSpec, policy) -> None:
             raise SpecError(
                 f"policy {policy.name!r} is not SPMD-wired yet: "
                 f"variance_stats unpacks (X, y), not HostWindows")
+    if spec.data.tiering.enabled and \
+            getattr(policy, "kind", None) == "two_track":
+        raise SpecError(
+            "policy 'two_track' trains a full-data track alongside the "
+            "window track — exactly the residency a tiered corpus cannot "
+            "provide; use a scan-stage policy with tiering")
 
 
 # --------------------------------------------------------------- components
@@ -316,8 +356,20 @@ def _build_convex(spec: RunSpec, policy) -> "Session":
     elif data.plane == "plane":
         stores = _convex_stores(data, {"X": np.asarray(ds.X),
                                        "y": np.asarray(ds.y)})
-        dataset = StreamingDataset(stores, growth=spec.schedule.growth,
-                                   prefetch_workers=data.prefetch_workers)
+        t = data.tiering
+        if t.enabled:
+            dataset = TieredCorpus(
+                stores, hbm_bytes=t.hbm_bytes, host_bytes=t.host_bytes,
+                growth=spec.schedule.growth,
+                prefetch_workers=data.prefetch_workers,
+                max_inflight=t.max_inflight,
+                manager_cls=TIERS.get(t.manager))
+            # a tiered run must never force full-corpus residency, so the
+            # engine's full-data evals run on the eval probe rows instead
+            eval_data = (ds.X[: data.eval_rows], ds.y[: data.eval_rows])
+        else:
+            dataset = StreamingDataset(stores, growth=spec.schedule.growth,
+                                       prefetch_workers=data.prefetch_workers)
     else:
         dataset = ds
     engine = _make_engine(spec, elastic=elastic,
@@ -735,6 +787,8 @@ class Session:
         meter = getattr(self.dataset, "meter", None)
         if meter is not None:
             trace.meta["data_plane"] = meter.snapshot()
+        if hasattr(self.dataset, "tier_meter"):
+            trace.meta["tiers"] = self.dataset.tier_report()
         if isinstance(self.dataset, DistributedDataset):
             trace.meta["data_plane_hosts"] = {
                 h: self.dataset.host_meters[h].snapshot()
@@ -752,6 +806,8 @@ class Session:
         meter = getattr(self.dataset, "meter", None)
         if meter is not None:
             out["data_plane"] = meter.snapshot()
+        if hasattr(self.dataset, "tier_meter"):
+            out["tiers"] = self.dataset.tier_meter.snapshot()
         if isinstance(self.dataset, DistributedDataset):
             out["hosts"] = {h: self.dataset.host_meters[h].snapshot()
                             for h in self.dataset.planes}

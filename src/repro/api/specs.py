@@ -83,6 +83,24 @@ def _coerce(obj, field: str, spec_cls) -> None:
         _set(obj, **{field: spec_cls.from_dict(v)})
 
 
+# ------------------------------------------------------------------- tiering
+@dataclasses.dataclass(frozen=True)
+class TieringSpec(_Spec):
+    """The tiered corpus plane (``repro.data.tiers``): an HBM byte budget
+    for the hot window, a host-RAM byte budget for the shard ring
+    (``0`` = unbounded: every example leaves disk exactly once per run),
+    and the prefetcher's in-flight shard bound.  ``enabled`` requires the
+    streaming plane (``DataSpec.plane="plane"``), a convex workload and a
+    single host; ``manager`` names a :data:`repro.api.registry.TIERS`
+    entry.  The budgets are *simulated* limits — the subsystem is fully
+    exercisable on CPU."""
+    enabled: bool = False
+    hbm_bytes: int = 0              # device budget for the hot window
+    host_bytes: int = 0             # ring budget; 0 = unbounded
+    max_inflight: int | None = None  # Prefetcher backpressure bound
+    manager: str = "ring"           # TIERS registry name
+
+
 # ------------------------------------------------------------------ workload
 @dataclasses.dataclass(frozen=True)
 class DataSpec(_Spec):
@@ -117,12 +135,14 @@ class DataSpec(_Spec):
     shard_size: int = 64
     delay_ms: float = 0.0           # > 0: throttle reads (models a NAS)
     prefetch_workers: int = 1
+    tiering: TieringSpec = dataclasses.field(default_factory=TieringSpec)
     seed: int = 0
 
     def __post_init__(self):
         items = self.generator.items() if isinstance(self.generator, dict) \
             else ((k, v) for k, v in self.generator)
         _set(self, generator=tuple(sorted((str(k), v) for k, v in items)))
+        _coerce(self, "tiering", TieringSpec)
 
 
 # ------------------------------------------------------------------ policy

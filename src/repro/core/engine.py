@@ -709,6 +709,19 @@ class BetEngine:
             return begin(n_t, n_next)
         return dataset.window(n_t)
 
+    @staticmethod
+    def _segment_plan(dataset, info: StageInfo, k: int):
+        """Chunk plan against the data plane: a tiered corpus whose stage
+        window exceeds the HBM budget splits the chunk's ``k`` steps across
+        its hot-window sweep (``[(steps, examples_per_step), ...]`` — the
+        engine calls ``advance_window`` between entries); every other plane
+        runs the chunk in one piece at full window cost (``None`` ->
+        ``info.n_t``)."""
+        plan = getattr(dataset, "segment_steps", None)
+        if plan is None:
+            return [(k, None)]
+        return plan(info.n_t, k)
+
     # ------------------------------------------------------------ scan stages
     def _run_scan_stage(self, ctx, dataset, optimizer, objective, policy,
                         info: StageInfo, w, state, full_data, *,
@@ -731,22 +744,35 @@ class BetEngine:
         probe_k = min(int(policy.probe), info.n_t) if policy.wants_variance else 0
         policy.stage_begin(info)
         rec = StageRecords()
+        chunk_costs: list = []
         while True:
             k = int(policy.plan_steps(info, rec.steps))
-            if self.profiler is not None and rec.steps == 0:
-                self.profiler.observe(info, kernel, (w, state, win, full_data),
-                                      {"num_steps": k, "probe_k": probe_k})
-            with _obs_span(obs, "stage.compute", steps=k, window=info.n_t):
-                out = kernel(w, state, win, full_data, num_steps=k,
-                             probe_k=probe_k)
-                w, state = out["params"], out["state"]
-                pulled = jax.device_get(
-                    {n: v for n, v in out.items()
-                     if n not in ("params", "state")})
-            ctx["transfers"] += 1
-            if obs is not None:
-                obs.instant("engine.transfer", transfers=ctx["transfers"])
-            rec.add_chunk(pulled["f"], pulled.get("f_full"), pulled.get("w"))
+            plan = self._segment_plan(dataset, info, k)
+            for seg_j, (kj, seg_n) in enumerate(plan):
+                if seg_j:
+                    # rotation: land the next pre-staged sweep segment
+                    with _obs_span(obs, "stage.acquire", window=info.n_t,
+                                   segment=seg_n):
+                        win = dataset.advance_window()
+                pk = probe_k if seg_n is None else min(probe_k, seg_n)
+                if self.profiler is not None and rec.steps == 0:
+                    self.profiler.observe(info, kernel,
+                                          (w, state, win, full_data),
+                                          {"num_steps": kj, "probe_k": pk})
+                with _obs_span(obs, "stage.compute", steps=kj,
+                               window=info.n_t):
+                    out = kernel(w, state, win, full_data, num_steps=kj,
+                                 probe_k=pk)
+                    w, state = out["params"], out["state"]
+                    pulled = jax.device_get(
+                        {n: v for n, v in out.items()
+                         if n not in ("params", "state")})
+                ctx["transfers"] += 1
+                if obs is not None:
+                    obs.instant("engine.transfer", transfers=ctx["transfers"])
+                rec.add_chunk(pulled["f"], pulled.get("f_full"),
+                              pulled.get("w"))
+                chunk_costs.append(seg_n)
             if policy.wants_variance:
                 rec.var, rec.g2 = float(pulled["var"]), float(pulled["g2"])
             expand = policy.should_expand(info, rec)
@@ -764,7 +790,7 @@ class BetEngine:
                     f"policy {policy.name} never expanded after {rec.steps} steps")
         with _obs_span(obs, "stage.flush", window=info.n_t):
             self._flush_stage(ctx, policy, info, rec, extra_base=extra_base,
-                              eval_charge=probe_k)
+                              eval_charge=probe_k, chunk_costs=chunk_costs)
         policy.stage_end(info, rec)
         self._stage_boundary(ctx, info, w, state)
         if obs is not None:
@@ -792,13 +818,18 @@ class BetEngine:
         the single-host engine records nothing extra."""
 
     def _flush_stage(self, ctx, policy, info: StageInfo, rec: StageRecords,
-                     *, extra_base=None, eval_charge: int = 0):
+                     *, extra_base=None, eval_charge: int = 0,
+                     chunk_costs=None):
         """Replay the §4.2 clock charges for the stage's inner steps and land
         the whole stage in the trace with one Trace.extend call.
 
         ``eval_charge`` > 0 bills one eval pass of that many points after
         each chunk — the variance-trigger probe (charged like DSM's norm
-        test and TwoTrack's condition eval; measurement f̂ evals stay free)."""
+        test and TwoTrack's condition eval; measurement f̂ evals stay free).
+
+        ``chunk_costs`` (parallel to ``rec.chunk_lengths()``) carries each
+        chunk's examples-per-step when it ran on a sweep segment instead of
+        the whole window; ``None`` entries charge the full ``n_t``."""
         self._collect_host_records(ctx, info)
         clock, cost, trace = ctx["clock"], ctx["cost"], ctx["trace"]
         fs, ffull = rec.f_window(), rec.f_full()
@@ -807,13 +838,17 @@ class BetEngine:
         accs = np.empty(n, dtype=np.int64)
         touched = 0
         i = 0
-        for clen in rec.chunk_lengths():
+        for ci, clen in enumerate(rec.chunk_lengths()):
+            chunk_n = info.n_t
+            if chunk_costs and ci < len(chunk_costs) \
+                    and chunk_costs[ci] is not None:
+                chunk_n = int(chunk_costs[ci])
             for j in range(clen):
-                clock.batch_update(cost(info.n_t))
-                touched += cost(info.n_t)
+                clock.batch_update(cost(chunk_n))
+                touched += cost(chunk_n)
                 if eval_charge and j == clen - 1:
-                    clock.eval_pass(eval_charge)
-                    touched += eval_charge
+                    clock.eval_pass(min(eval_charge, chunk_n))
+                    touched += min(eval_charge, chunk_n)
                 times[i], accs[i] = clock.time, clock.data_accesses
                 i += 1
         self._note_access(ctx, touched)

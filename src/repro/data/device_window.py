@@ -323,6 +323,30 @@ class DeviceWindow:
         self._n_dev = jnp.int32(self._n)
         return self._n
 
+    def append_staged(self, rows) -> int:
+        """Land rows that are *already on device* (the tiered corpus's
+        double-buffered staging path: ``jax.device_put`` ran on the staging
+        thread while the previous stage computed).  Same in-place
+        ``dynamic_update_slice`` landing as :meth:`append`, but no host
+        array conversion and **no upload metering** — the commit path
+        meters the transfer itself, on the driver thread, so discarded
+        staged buffers are never counted."""
+        if tuple(rows.shape[1:]) != self.item_shape:
+            raise ValueError(
+                f"rows shape {tuple(rows.shape[1:])} != item shape "
+                f"{self.item_shape}")
+        k = int(rows.shape[0])
+        if self._n + k > self.capacity:
+            raise ValueError(
+                f"append of {k} staged rows overflows window "
+                f"({self._n}/{self.capacity} resident)")
+        kernel = _append_kernel(self._buf.shape, rows.shape, self._buf.dtype,
+                                self.sharding)
+        self._buf = kernel(self._buf, rows, jnp.int32(self._n))
+        self._n += k
+        self._n_dev = jnp.int32(self._n)
+        return self._n
+
     # ---------------------------------------------------------------- cursor
     def cursor(self) -> dict:
         """Checkpointable residency bookkeeping: together with the fixed

@@ -27,7 +27,8 @@ import numpy as np
 
 from .device_window import DeviceWindow
 from .prefetch import Prefetcher
-from .shards import DataAccessMeter, InMemoryShardStore, ShardStore
+from .shards import (DataAccessMeter, InMemoryShardStore, ShardStore,
+                     store_capacity)
 
 
 def _fit_sharding(sharding, ndim: int):
@@ -81,7 +82,7 @@ class StreamingDataset:
         # num_examples but preallocates residency at its eventual capacity —
         # expansion then stays in-place append even as the corpus arrives
         self.windows = tuple(
-            DeviceWindow(capacity=getattr(s, "capacity", s.num_examples),
+            DeviceWindow(capacity=store_capacity(s),
                          item_shape=s.item_shape,
                          dtype=s.dtype, growth=growth, sharding=sh,
                          meter=self.meter, meter_examples=i == 0)

@@ -27,15 +27,12 @@ from typing import Sequence
 
 import numpy as np
 
-from .shards import DataAccessMeter, ShardStore
+# ShardLoadError lives with the stores now (MemmapShardStore raises it for
+# corrupt files too); re-exported here because the failure contract above
+# is where the name was born
+from .shards import DataAccessMeter, ShardLoadError, ShardStore
 
-
-class ShardLoadError(RuntimeError):
-    """A background shard load failed; the original exception is chained."""
-
-    def __init__(self, shard: int, cause: BaseException):
-        super().__init__(f"shard {shard} failed to load: {cause!r}")
-        self.shard = shard
+__all__ = ["Prefetcher", "ShardLoadError"]
 
 
 class Prefetcher:
@@ -57,10 +54,20 @@ class Prefetcher:
     shuts the plane down): whichever side takes the lock second wins nothing
     — a post-close ``schedule`` is a silent no-op, and only a post-close
     ``take`` raises, because dropping a demand load is a correctness error
-    while dropping a prefetch hint is not."""
+    while dropping a prefetch hint is not.
+
+    ``max_inflight`` bounds how many scheduled loads may hold host RAM at
+    once (loaded-but-not-taken shards are the peak): excess hints queue in
+    an ordered backlog and are submitted as earlier loads are *taken*, so a
+    large next-stage schedule exerts backpressure instead of materializing
+    the whole expansion in memory.  Demand loads (``take`` of a backlogged
+    or unscheduled shard) always run immediately — the bound throttles
+    hints, never correctness.  ``None`` (default) keeps the historical
+    unbounded behavior."""
 
     def __init__(self, stores: Sequence[ShardStore],
-                 meter: DataAccessMeter | None = None, *, max_workers: int = 1):
+                 meter: DataAccessMeter | None = None, *, max_workers: int = 1,
+                 max_inflight: int | None = None):
         stores = tuple(stores)
         if not stores:
             raise ValueError("Prefetcher needs at least one store")
@@ -68,11 +75,17 @@ class Prefetcher:
         if len(sizes) != 1:
             raise ValueError(
                 f"field stores disagree on (num_examples, shard_size): {sizes}")
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1 (or None for unbounded), "
+                f"got {max_inflight}")
         self.stores = stores
         self.meter = meter
+        self.max_inflight = max_inflight
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="bet-prefetch")
         self._pending: dict[int, Future] = {}
+        self._backlog: list[int] = []       # scheduled, awaiting a slot
         self._lock = threading.Lock()
         self._closed = False
         # observability (repro.obs.metrics.attach_prefetcher): when wired,
@@ -87,22 +100,44 @@ class Prefetcher:
         if rec is not None:
             rec.instant(name, tags=self.recorder_tags or None, **fields)
 
+    def _obs_depth(self, inflight: int, backlog: int) -> None:
+        rec = self.recorder
+        if rec is not None:
+            rec.counter("prefetch.depth", tags=self.recorder_tags or None,
+                        inflight=inflight, backlog=backlog)
+
+    def _pump_locked(self) -> list[int]:
+        """Submit backlogged hints while in-flight slots are free (caller
+        holds the lock).  Returns the ids submitted, for emission."""
+        started = []
+        while self._backlog and (
+                self.max_inflight is None
+                or len(self._pending) < self.max_inflight):
+            i = self._backlog.pop(0)
+            self._pending[i] = self._pool.submit(self._timed_load, i)
+            started.append(i)
+        return started
+
     # ------------------------------------------------------------------ api
     def schedule(self, shard_ids) -> None:
         """Begin loading shards in the background (idempotent per shard).
-        No-op after ``close``; raises ``ShardLoadError`` eagerly if any
-        previously scheduled load has already failed."""
-        new_ids = []
+        Beyond ``max_inflight``, hints queue in the backlog and start as
+        earlier loads are taken.  No-op after ``close``; raises
+        ``ShardLoadError`` eagerly if any previously scheduled load has
+        already failed."""
         with self._lock:
             if self._closed:
                 return
             self._sweep_failures_locked()
-            for i in shard_ids:
-                if i not in self._pending:
-                    new_ids.append(i)
-                    self._pending[i] = self._pool.submit(self._timed_load, i)
+            new_ids = [i for i in shard_ids
+                       if i not in self._pending and i not in self._backlog]
+            self._backlog.extend(new_ids)
+            self._pump_locked()
+            inflight, backlog = len(self._pending), len(self._backlog)
         for i in new_ids:        # emit outside the lock
             self._obs("prefetch.scheduled", shard=int(i))
+        if new_ids:
+            self._obs_depth(inflight, backlog)
 
     def cancel(self, shard_ids) -> list[int]:
         """Drop scheduled loads whose shards no longer belong here (elastic
@@ -121,31 +156,64 @@ class Prefetcher:
                 if fut is not None:
                     fut.cancel()
                     dropped.append(i)
+                elif i in self._backlog:
+                    self._backlog.remove(i)
+                    dropped.append(i)
+            self._pump_locked()
+            inflight, backlog = len(self._pending), len(self._backlog)
         for i in dropped:
             self._obs("prefetch.cancelled", shard=int(i))
+        if dropped:
+            self._obs_depth(inflight, backlog)
         return dropped
 
     def scheduled(self) -> list[int]:
-        """All shards currently scheduled (finished or not, not yet taken)."""
+        """All shards currently scheduled (submitted or backlogged, not yet
+        taken)."""
         with self._lock:
-            return sorted(self._pending)
+            return sorted(set(self._pending) | set(self._backlog))
 
     def unfinished(self) -> list[int]:
         """Scheduled shards whose loads have not completed yet — the
         straggler detector's backlog measure at a stage flush."""
         with self._lock:
-            return sorted(i for i, fut in self._pending.items()
-                          if not fut.done())
+            return sorted({i for i, fut in self._pending.items()
+                           if not fut.done()} | set(self._backlog))
 
-    def take(self, shard: int) -> tuple[np.ndarray, ...]:
-        """Block until ``shard`` is loaded and return one array per store."""
+    def inflight(self) -> int:
+        """Submitted-but-not-taken loads — the host-RAM bound
+        ``max_inflight`` enforces (loaded shards hold their arrays until
+        taken)."""
+        with self._lock:
+            return len(self._pending)
+
+    def take(self, shard: int, *, hidden: bool = False
+             ) -> tuple[np.ndarray, ...]:
+        """Block until ``shard`` is loaded and return one array per store.
+        Taking frees an in-flight slot, so the next backlogged hint starts
+        here — backpressure releases exactly as fast as the consumer
+        drains.
+
+        ``hidden=True`` records the wait as fully overlapped
+        (``blocked_s=0``): the tiered corpus consumes shards on a
+        background staging thread whose blocking is by construction
+        concurrent with driver compute, and charging it as demand-side
+        blocked time would misreport the §3.3 overlap."""
         with self._lock:
             self._check_open()
             self._sweep_failures_locked()
             fut = self._pending.pop(shard, None)
             prefetched = fut is not None
             if fut is None:
+                # a demand load bypasses the bound; drop a backlogged hint
+                # for the same shard so it cannot double-load later
+                if shard in self._backlog:
+                    self._backlog.remove(shard)
                 fut = self._pool.submit(self._timed_load, shard)
+            started = self._pump_locked()
+            inflight, backlog = len(self._pending), len(self._backlog)
+        if started:
+            self._obs_depth(inflight, backlog)
         t0 = time.perf_counter()
         try:
             arrays, duration = fut.result()
@@ -158,7 +226,7 @@ class Prefetcher:
                 from None
         except Exception as exc:
             raise ShardLoadError(shard, exc) from exc
-        blocked = time.perf_counter() - t0
+        blocked = 0.0 if hidden else time.perf_counter() - t0
         if self.meter is not None:
             self.meter.record_load(
                 nbytes=sum(a.nbytes for a in arrays),
@@ -176,6 +244,7 @@ class Prefetcher:
             self._closed = True
             pending = dict(self._pending)
             self._pending.clear()
+            self._backlog.clear()
         # shut down outside the lock: workers may take a while to drain and
         # a racing schedule()/take() must not block on them
         for fut in pending.values():

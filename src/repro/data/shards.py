@@ -33,6 +33,27 @@ import time
 import numpy as np
 
 
+class ShardLoadError(RuntimeError):
+    """A shard load failed (truncated/corrupt file, dead storage path);
+    the original exception, when there is one, is chained."""
+
+    def __init__(self, shard: int, cause: BaseException | str):
+        detail = cause if isinstance(cause, str) else repr(cause)
+        super().__init__(f"shard {shard} failed to load: {detail}")
+        self.shard = shard
+
+
+def store_capacity(store) -> int:
+    """The number of examples a store will eventually hold.
+
+    Offline stores are fixed at ``num_examples``; an online store
+    (serve/ingest.py) reports only *sealed* examples there but bounds the
+    eventual corpus with a ``capacity`` attribute.  Residency preallocation
+    (``DeviceWindow``), the ownership prefix map (``ShardOwnership``) and the
+    tier planner all size themselves from this one answer."""
+    return int(getattr(store, "capacity", store.num_examples))
+
+
 # ------------------------------------------------------------------ metering
 @dataclasses.dataclass
 class DataAccessMeter:
@@ -194,6 +215,35 @@ class MemmapShardStore(ShardStore):
         self.item_shape = tuple(meta["item_shape"])
         self.dtype = np.dtype(meta["dtype"])
 
+    @classmethod
+    def open(cls, directory: str, *, validate: bool = True
+             ) -> "MemmapShardStore":
+        """Open an existing shard directory, checking every shard file's
+        size against the recorded shape/dtype.  A missing or short file
+        raises ``ShardLoadError`` naming the shard up front — instead of a
+        numpy reshape error halfway through training when the prefetcher
+        first touches it."""
+        store = cls(directory)
+        if validate:
+            for i in range(store.num_shards):
+                store._validate_shard(i)
+        return store
+
+    def _validate_shard(self, shard: int) -> None:
+        """Size-check shard ``shard``'s file: header bytes plus exactly
+        ``examples_in(shard) * example_nbytes`` of payload."""
+        path = self._shard_path(self.directory, shard)
+        try:
+            size = os.path.getsize(path)
+        except OSError as exc:
+            raise ShardLoadError(shard, exc) from exc
+        expected = self.examples_in(shard) * self.example_nbytes
+        if size < expected:
+            raise ShardLoadError(
+                shard, f"{path} holds {size} bytes, needs at least "
+                       f"{expected} for {self.examples_in(shard)} examples "
+                       f"of {self.item_shape} {self.dtype} (truncated?)")
+
     @staticmethod
     def _shard_path(directory: str, shard: int) -> str:
         return os.path.join(directory, f"shard_{shard:05d}.npy")
@@ -219,7 +269,17 @@ class MemmapShardStore(ShardStore):
 
     def load(self, shard: int) -> np.ndarray:
         self.examples_in(shard)               # bounds-check
-        mm = np.load(self._shard_path(self.directory, shard), mmap_mode="r")
+        path = self._shard_path(self.directory, shard)
+        try:
+            mm = np.load(path, mmap_mode="r")
+        except (OSError, ValueError) as exc:
+            # a corrupt .npy header / vanished file surfaces as the storage
+            # failure it is, with the shard named, not a numpy parse error
+            raise ShardLoadError(shard, exc) from exc
+        if mm.shape != (self.examples_in(shard),) + self.item_shape:
+            raise ShardLoadError(
+                shard, f"{path} has shape {mm.shape}, expected "
+                       f"{(self.examples_in(shard),) + self.item_shape}")
         return np.array(mm)                   # force the read off disk
 
 

@@ -1,0 +1,13 @@
+"""Tiered corpus subsystem: HBM-hot windows over host-RAM and disk tiers.
+
+See :mod:`repro.data.tiers.corpus` for the design overview.
+"""
+from .ckpt import (is_lane_pointer, load_lane_slices, unlink_lane_slices,
+                   write_lane_slices)
+from .corpus import TieredCorpus
+from .host import HostRing
+from .manager import RingTierManager, TierMeter
+
+__all__ = ["TieredCorpus", "HostRing", "RingTierManager", "TierMeter",
+           "write_lane_slices", "load_lane_slices", "unlink_lane_slices",
+           "is_lane_pointer"]

@@ -1,0 +1,61 @@
+"""Shard-parallel checkpoint lane slices.
+
+A distributed stage checkpoint used to serialize every lane's
+``DataAccessMeter`` into the single sidecar JSON — one writer for state
+that is naturally per-host.  Here each lane's slice becomes its own file,
+``<stem>_laneNN.json``, written by its own thread (the single-process
+stand-in for every host writing its own slice), and the main sidecar
+keeps only a pointer ``{"lane_files": [...]}``.  The publish order keeps
+the atomicity contract: lane files land (each via its own
+tmp-then-``os.replace``) **before** the checkpoint's ``.npz`` is
+published, and readers key on the ``.npz`` — once it appears, its lanes
+exist.  ``peek_stage_meta`` deliberately returns the raw pointer (it is a
+no-array peek; inflating lanes is ``load_stage_checkpoint``'s job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from concurrent.futures import ThreadPoolExecutor
+
+LANE_POINTER_KEY = "lane_files"
+
+
+def is_lane_pointer(value) -> bool:
+    """Is this ``host_meters`` entry a lane-file pointer (vs inline list)?"""
+    return isinstance(value, dict) and LANE_POINTER_KEY in value
+
+
+def write_lane_slices(directory, stem: str, host_meters) -> dict:
+    """Write one ``<stem>_laneNN.json`` per lane meter snapshot,
+    concurrently, and return the pointer to store in the main sidecar."""
+    d = pathlib.Path(directory)
+    names = [f"{stem}_lane{i:02d}.json" for i in range(len(host_meters))]
+
+    def write_one(i: int) -> None:
+        tmp = d / f".tmp_{names[i]}"
+        tmp.write_text(json.dumps({"lane": i, "meter": host_meters[i]}))
+        os.replace(tmp, d / names[i])
+
+    with ThreadPoolExecutor(max_workers=min(8, len(names)) or 1) as pool:
+        list(pool.map(write_one, range(len(names))))
+    return {LANE_POINTER_KEY: names}
+
+
+def load_lane_slices(directory, pointer: dict) -> list[dict]:
+    """Inflate a lane pointer back into the in-order meter snapshot list."""
+    d = pathlib.Path(directory)
+    names = pointer[LANE_POINTER_KEY]
+
+    def read_one(name: str) -> dict:
+        return json.loads((d / name).read_text())["meter"]
+
+    with ThreadPoolExecutor(max_workers=min(8, len(names)) or 1) as pool:
+        return list(pool.map(read_one, names))
+
+
+def unlink_lane_slices(directory, stem: str) -> None:
+    """Remove a checkpoint's lane files (the keep-rotation cleanup)."""
+    for f in pathlib.Path(directory).glob(f"{stem}_lane*.json"):
+        f.unlink(missing_ok=True)

@@ -1,0 +1,146 @@
+"""HostRing — the host-RAM spill tier between disk shards and HBM.
+
+Every shard the :class:`~repro.data.prefetch.Prefetcher` delivers is
+retained here, keyed by shard id, so rotation re-promotions are host-RAM
+hits instead of disk re-reads: with the default unbounded ring, each
+example leaves storage exactly once per run no matter how many sweeps the
+hot window makes over it (the BENCH_scale ``each_example_loaded_once``
+claim).  A ``host_bytes`` budget turns the ring into a FIFO cache —
+oldest shards spill first, *protected* shards (the ones backing the
+current and staged hot segments) are never evicted, and a later touch of
+an evicted shard is a fresh disk read, metered as such.
+
+Thread contract: the driver thread and the corpus's one staging thread
+both call in; a single lock serializes shard-map mutation *and* the
+prefetcher takes, so the ``DataAccessMeter``'s load counters are only
+ever updated from one thread at a time.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from ..prefetch import Prefetcher
+from ..shards import ShardStore
+from .manager import TierMeter
+
+
+class HostRing:
+    """Host-RAM shard cache over a prefetcher, with budgeted FIFO spill."""
+
+    def __init__(self, stores: Sequence[ShardStore],
+                 prefetcher: Prefetcher, *, host_bytes: int = 0,
+                 tier_meter: TierMeter | None = None):
+        if host_bytes < 0:
+            raise ValueError(f"host_bytes must be >= 0 (0 = unbounded), "
+                             f"got {host_bytes}")
+        self.stores = tuple(stores)
+        self.prefetcher = prefetcher
+        self.host_bytes = int(host_bytes)
+        self.tier_meter = tier_meter
+        self._shards: dict[int, tuple[np.ndarray, ...]] = {}
+        self._order: list[int] = []          # arrival order (FIFO spill)
+        self._bytes = 0
+        self._protected: set[int] = set()
+        self._pinned: set[int] = set()       # mid-take ranges, never spilled
+        self._lock = threading.RLock()
+        # observability: tier.evict instants when wired (repro.obs.metrics)
+        self.recorder = None
+
+    # -------------------------------------------------------------- queries
+    @property
+    def resident_shards(self) -> int:
+        with self._lock:
+            return len(self._shards)
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def shards_for(self, lo: int, hi: int) -> range:
+        """Shard ids covering example range ``[lo, hi)``."""
+        size = self.stores[0].shard_size
+        return range(lo // size, -(-hi // size)) if hi > lo else range(0)
+
+    # ------------------------------------------------------------ residency
+    def schedule(self, lo: int, hi: int) -> None:
+        """Background-load the shards covering ``[lo, hi)`` that are not
+        already ringed — the overlap hint a staging pass issues before the
+        driver goes back to computing."""
+        with self._lock:
+            missing = [i for i in self.shards_for(lo, hi)
+                       if i not in self._shards]
+        if missing:
+            self.prefetcher.schedule(missing)
+
+    def take_rows(self, lo: int, hi: int, *, hidden: bool = False
+                  ) -> tuple[np.ndarray, ...]:
+        """Rows ``[lo, hi)`` as one array per field store, pulling any
+        missing shards through the prefetcher (blocking).  ``hidden=True``
+        marks the waits as overlapped (the staging-thread path: its blocking
+        is by construction concurrent with driver compute).  Newly pulled
+        shards enter the ring; the budget may spill *unprotected* ones."""
+        size = self.stores[0].shard_size
+        ids = list(self.shards_for(lo, hi))
+        with self._lock:
+            # pin the whole range for the duration: a tight budget must not
+            # spill shard i while shard j > i of the *same take* is landing
+            self._pinned.update(ids)
+            try:
+                for i in ids:
+                    if i not in self._shards:
+                        self._insert_locked(i, self.prefetcher.take(
+                            i, hidden=hidden))
+                parts: list[list[np.ndarray]] = [[] for _ in self.stores]
+                for i in ids:
+                    arrays = self._shards[i]
+                    a = max(lo - i * size, 0)
+                    b = min(hi - i * size, arrays[0].shape[0])
+                    for acc, arr in zip(parts, arrays):
+                        acc.append(arr[a:b])
+            finally:
+                self._pinned.difference_update(ids)
+                self._spill_locked()         # re-apply the budget unpinned
+        return tuple(p[0] if len(p) == 1 else np.concatenate(p)
+                     for p in parts)
+
+    def protect(self, ranges) -> None:
+        """Pin the shards backing ``ranges`` (``(lo, hi)`` pairs) against
+        spill — the current hot segment and the one being staged must stay
+        promotable without a disk round-trip."""
+        keep: set[int] = set()
+        for lo, hi in ranges:
+            keep.update(self.shards_for(lo, hi))
+        with self._lock:
+            self._protected = keep
+            self._spill_locked()
+
+    # ------------------------------------------------------------ internals
+    def _insert_locked(self, shard: int, arrays: tuple[np.ndarray, ...]):
+        self._shards[shard] = arrays
+        self._order.append(shard)
+        self._bytes += sum(a.nbytes for a in arrays)
+        self._spill_locked()
+
+    def _spill_locked(self) -> None:
+        if not self.host_bytes:
+            return                            # unbounded ring
+        i = 0
+        while self._bytes > self.host_bytes and i < len(self._order):
+            cand = self._order[i]
+            if cand in self._protected or cand in self._pinned:
+                i += 1
+                continue
+            arrays = self._shards.pop(cand)
+            self._order.pop(i)
+            self._bytes -= sum(a.nbytes for a in arrays)
+            examples = int(arrays[0].shape[0])
+            if self.tier_meter is not None:
+                self.tier_meter.record_eviction(examples)
+            if self.recorder is not None:
+                self.recorder.instant("tier.evict", shard=int(cand),
+                                      examples=examples,
+                                      ring_bytes=self._bytes)

@@ -30,7 +30,7 @@ import dataclasses
 
 import numpy as np
 
-from ..data.shards import ShardStore
+from ..data.shards import ShardStore, store_capacity
 
 STRATEGIES = ("striped", "blocked")
 
@@ -148,7 +148,7 @@ class ShardOwnership(OwnershipAlgebra):
         online store still ingesting): the map is fixed once at the bound,
         so data arrival only ever *appends* to each host's local window and
         the prefix invariant extends to a corpus discovered at runtime."""
-        n = int(getattr(store, "capacity", store.num_examples))
+        n = store_capacity(store)
         return cls(num_shards=-(-n // store.shard_size), num_hosts=num_hosts,
                    shard_size=store.shard_size,
                    num_examples=n, strategy=strategy)
@@ -288,7 +288,7 @@ class OwnedShardStore(ShardStore):
 
     def __init__(self, inner: ShardStore, ownership: ShardOwnership,
                  host: int):
-        cap = int(getattr(inner, "capacity", inner.num_examples))
+        cap = store_capacity(inner)
         if inner.shard_size != ownership.shard_size or \
                 cap != ownership.num_examples:
             raise ValueError(

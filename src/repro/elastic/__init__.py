@@ -6,6 +6,7 @@
 # one fixed permutation, so (t, n_t) + the ownership map determine exactly
 # what any replacement worker must re-read.
 from .checkpoint import (RestoredRun, StageCheckpointer, dataset_state,
-                         load_stage_checkpoint, restore_dataset)
+                         load_stage_checkpoint, peek_stage_meta,
+                         restore_dataset)
 from .faults import FaultEvent, FaultPlan
 from .runtime import ElasticBetEngine, ElasticDataset

@@ -26,6 +26,9 @@ from ..checkpoint.ckpt import load_state, save_state
 from ..core.engine import ResumeState, StageEnd
 from ..core.timemodel import SimulatedClock
 from ..data.plane import StreamingDataset
+from ..data.tiers import TieredCorpus
+from ..data.tiers.ckpt import (is_lane_pointer, load_lane_slices,
+                               unlink_lane_slices, write_lane_slices)
 from ..dist.runtime import DistributedDataset
 
 
@@ -42,6 +45,10 @@ def dataset_state(dataset) -> dict:
         elastic = getattr(dataset, "elastic_state", None)
         if elastic is not None:
             state["elastic"] = elastic()
+    elif isinstance(dataset, TieredCorpus):
+        state["kind"] = "tiered"
+        state["meter"] = dataset.meter.snapshot()
+        state["tier"] = dataset.tier_state()
     elif isinstance(dataset, StreamingDataset):
         state["kind"] = "streaming"
         state["meter"] = dataset.meter.snapshot()
@@ -55,6 +62,8 @@ def dataset_state(dataset) -> dict:
 def _dataset_kind(dataset) -> str:
     if isinstance(dataset, DistributedDataset):
         return "distributed"
+    if isinstance(dataset, TieredCorpus):
+        return "tiered"
     if isinstance(dataset, StreamingDataset):
         return "streaming"
     return "plain"
@@ -96,6 +105,15 @@ def restore_dataset(dataset, state: dict, n_t: int) -> dict:
         for m, snap in zip(dataset.host_meters, state["host_meters"]):
             m.restore(snap)
         dataset._access.restore(state["access_meter"])
+        return rewarm
+    if kind == "tiered":
+        # re-land ONLY the checkpointed hot window (recovery I/O bounded by
+        # the HBM budget, not n_t), then the usual rewarm/restore split
+        reland = dataset.restore_tier(state["tier"])
+        rewarm = dataset.meter.snapshot()
+        rewarm.update(reland)
+        dataset.meter.restore(state["meter"])
+        dataset.tier_meter.restore(state["tier"]["meter"])
         return rewarm
     dataset.window(n_t)
     _check_cursor(state["window_cursor"],
@@ -189,6 +207,14 @@ class StageCheckpointer:
         }
         if self.spec is not None:
             meta["spec"] = self.spec
+        ds_state = meta["dataset"]
+        if ds_state.get("kind") == "distributed" and "host_meters" in ds_state:
+            # shard-parallel save: each lane writes its own slice file and
+            # the sidecar keeps a pointer; lanes land before the .npz is
+            # published so readers (which key on the .npz) never see a
+            # checkpoint whose lanes are missing
+            ds_state["host_meters"] = write_lane_slices(
+                d, path.name, ds_state["host_meters"])
         save_state(tmp, {"params": end.params, "opt": end.opt_state},
                    meta=meta)
         os.replace(tmp.with_suffix(".json"), path.with_suffix(".json"))
@@ -198,6 +224,7 @@ class StageCheckpointer:
         for old in ckpts[: -self.keep]:
             old.unlink(missing_ok=True)
             old.with_suffix(".json").unlink(missing_ok=True)
+            unlink_lane_slices(d, old.stem)
         return path
 
     def latest(self) -> pathlib.Path | None:
@@ -221,6 +248,10 @@ def peek_stage_meta(path) -> dict:
 
 def load_stage_checkpoint(path, params_like, opt_like=None) -> "RestoredRun":
     trees, meta = load_state(path, {"params": params_like, "opt": opt_like})
+    ds_state = meta.get("dataset") or {}
+    if is_lane_pointer(ds_state.get("host_meters")):
+        ds_state["host_meters"] = load_lane_slices(
+            pathlib.Path(path).parent, ds_state["host_meters"])
     return RestoredRun(params=trees["params"], opt_state=trees["opt"],
                        meta=meta)
 

@@ -244,4 +244,8 @@ def attach_dataset(dataset, recorder):
     prefetcher = getattr(dataset, "prefetcher", None)
     if prefetcher is not None:
         attach_prefetcher(prefetcher, recorder)
+    if hasattr(dataset, "recorder"):
+        # datasets with their own event vocabulary (the tiered corpus's
+        # ``tier.*`` stream) take the recorder directly
+        dataset.recorder = recorder
     return dataset

@@ -34,7 +34,8 @@ import os
 import pathlib
 
 #: Benchmark modules with committed anchors at the repo root.
-MODULES = ("engine", "data", "dist", "elastic", "serve", "workloads")
+MODULES = ("engine", "data", "dist", "elastic", "serve", "workloads",
+           "scale")
 
 #: Guarded metrics per module: (dotted path, direction, rel_slack,
 #: abs_slack).  ``ge`` — observed must stay above ``anchor*(1-rel)-abs``;
@@ -64,6 +65,10 @@ GUARDED: dict[str, list[tuple[str, str, float, float]]] = {
         ("runs.swap.staleness.max_warm", "le", 0.0, 0.0),
     ],
     "workloads": [],
+    "scale": [
+        ("meter.overlap_fraction", "ge", 0.2, 0.0),
+        ("tier.resident_reuploads", "le", 0.0, 0.0),
+    ],
 }
 
 HISTORY_NAME = "BENCH_history.jsonl"

@@ -262,6 +262,30 @@ class RunReport:
                 out["each_example_loaded_once"]
         return out
 
+    # ------------------------------------------------------------------ tiers
+    def tier_summary(self) -> dict | None:
+        """The tier plane, when present: promotions/evictions, the
+        measured resident-reupload count, and the last occupancy sample
+        (``None`` on untiered runs — the report stays byte-identical)."""
+        promotes = self.named("tier.promote")
+        occ = self.named("tier.occupancy")
+        if not promotes and not occ:
+            return None
+        last = occ[-1]["fields"] if occ else {}
+        return {
+            "promotions": len(promotes),
+            "promoted_examples": sum(int(e["fields"].get("examples", 0))
+                                     for e in promotes),
+            "staged": sum(1 for e in promotes
+                          if e["fields"].get("source") == "staged"),
+            "direct": sum(1 for e in promotes
+                          if e["fields"].get("source") == "direct"),
+            "evictions": len(self.named("tier.evict")),
+            "discards": len(self.named("tier.discard")),
+            "resident_reuploads": int(last.get("resident_reuploads", 0)),
+            "occupancy": last,
+        }
+
     # ------------------------------------------------------------------ serve
     def serve_summary(self) -> dict | None:
         """The serving side, when present: tick time, ingest volume, stage
@@ -301,6 +325,9 @@ class RunReport:
         serve = self.serve_summary()
         if serve is not None:
             out["serve"] = serve
+        tiers = self.tier_summary()
+        if tiers is not None:
+            out["tiers"] = tiers
         return out
 
     def to_text(self) -> str:
@@ -329,6 +356,13 @@ class RunReport:
         for k, v in self.claims().items():
             verdict = "PASS" if v else ("n/a" if v is None else "FAIL")
             lines.append(f"claim {k}: {verdict}")
+        tiers = self.tier_summary()
+        if tiers is not None:
+            lines.append(
+                f"tiers: {tiers['promotions']} promotions "
+                f"({tiers['staged']} staged, {tiers['direct']} direct), "
+                f"{tiers['evictions']} evictions, "
+                f"resident reuploads {tiers['resident_reuploads']}")
         serve = self.serve_summary()
         if serve is not None:
             lines.append(

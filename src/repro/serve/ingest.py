@@ -16,9 +16,9 @@ Contract with the rest of the plane:
     worker thread while the serving thread appends.
   * ``capacity`` bounds the eventual corpus.  ``DeviceWindow`` and
     ``ShardOwnership`` size themselves from it (via
-    ``getattr(store, "capacity", store.num_examples)``), so residency and
-    the ownership prefix invariant extend to a corpus whose true size is
-    discovered at runtime.
+    ``repro.data.shards.store_capacity``), so residency and the ownership
+    prefix invariant extend to a corpus whose true size is discovered at
+    runtime.
   * ``close()`` seals the ragged tail (the one place a short shard is
     allowed — as the *last* shard, matching the base contract) and freezes
     the store; a closed store is indistinguishable from an offline one.

@@ -28,7 +28,7 @@ def test_bench_smoke_asserts_every_json_anchor():
     assert out.returncode == 0, (out.stdout[-4000:], out.stderr[-4000:])
     # every bench_* module ran and asserted its claims
     for name in ("bench_engine", "bench_data", "bench_dist",
-                 "bench_elastic", "bench_workloads"):
+                 "bench_elastic", "bench_workloads", "bench_scale"):
         assert f"{name}/__wall__" in out.stdout, out.stdout[-4000:]
         assert f"{name}/__wall__" not in [
             l for l in out.stdout.splitlines() if l.endswith("FAILED")]
@@ -39,7 +39,7 @@ def test_bench_smoke_asserts_every_json_anchor():
     assert m, out.stdout[-2000:]
     smoke_dir = pathlib.Path(m.group(1))
     assert smoke_dir != REPO_ROOT
-    for name in ("engine", "data", "dist", "elastic", "workloads"):
+    for name in ("engine", "data", "dist", "elastic", "workloads", "scale"):
         report = json.loads((smoke_dir / f"BENCH_{name}.json").read_text())
         claims = report["claims"]
         assert claims and all(claims.values()), (name, claims)
@@ -55,6 +55,16 @@ def test_bench_smoke_asserts_every_json_anchor():
     event_report = json.loads((obs / "report.json").read_text())
     assert event_report["claims"]["overlap_ge_half"] is True
     assert (obs / "report.txt").read_text().strip()
+    # the tiered scaling study leaves its own schema-valid trail, with the
+    # tier plane's events (stage/promote/occupancy) actually present
+    scale_events = from_jsonl(smoke_dir / "obs_scale" / "events.jsonl")
+    assert scale_events and validate_events(scale_events) == []
+    names = {e["name"] for e in scale_events}
+    assert {"tier.stage", "tier.promote", "tier.occupancy",
+            "tier.rotate_begin", "prefetch.depth"} <= names, sorted(names)
+    scale_report = json.loads(
+        (smoke_dir / "obs_scale" / "report.json").read_text())
+    assert scale_report["tiers"]["resident_reuploads"] == 0
     # the workload matrix leaves one obs trail per preset (sweep forces
     # the telemetry plane on); every event log must be schema-valid
     preset_dirs = sorted((smoke_dir / "obs_workloads").iterdir())

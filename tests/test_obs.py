@@ -225,8 +225,15 @@ def test_prefetcher_events_ordered_across_threads():
     assert dropped == [2]
     evs = rec.event_dicts()
     assert all(e["tags"] == {"host": 0} for e in evs)
+    # the depth gauge interleaves with the per-shard events; it carries the
+    # queue counters, not a shard id
+    depths = [e for e in evs if e["name"] == "prefetch.depth"]
+    assert depths and all(
+        {"inflight", "backlog"} <= set(e["fields"]) for e in depths)
     by_shard: dict = {}
     for e in evs:
+        if e["name"] == "prefetch.depth":
+            continue
         by_shard.setdefault(e["fields"]["shard"], {})[e["name"]] = e
     for shard in (0, 1, 3):
         seen = by_shard[shard]
